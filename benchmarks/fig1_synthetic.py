@@ -1,0 +1,47 @@
+"""Paper Fig. 1: communication + query efficiency of FZooS vs FedZO /
+FedProx / SCAFFOLD (I/II) on heterogeneous synthetic quadratics with
+varying C.
+
+CPU-scale reduction of Appx. E.1: d (300 -> 40/100), R (50 -> 20/35),
+N = 5 as in the paper.  Reported per (algo, C): best F, rounds/queries to
+reach the epsilon target, and mean wall time per round.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, algo_config, best_f, queries_at_round, rounds_to_target, run_algo
+from repro.core import objectives as obj
+
+ALGOS = ("fzoos", "fedzo", "fedprox", "scaffold1", "scaffold2")
+
+
+def run(quick: bool = True) -> list[Row]:
+    d = 40 if quick else 100
+    rounds = 20 if quick else 35
+    n = 5
+    eps_gap = 0.35  # target: close 65% of the F(x0)->F* gap
+    rows = []
+    for c_het in (0.5, 5.0) if quick else (0.5, 5.0, 50.0):
+        key = jax.random.PRNGKey(0)
+        cobjs = obj.make_quadratic(key, n, d, c_het, 0.001)
+        f0 = float(obj.quadratic_global_value(cobjs, jax.numpy.full((d,), 0.5)))
+        fstar = obj.quadratic_fstar(d)
+        target = fstar + eps_gap * (f0 - fstar)
+        for name in ALGOS:
+            cfg = algo_config(name, d, n,
+                              n_features=256 if quick else 512,
+                              traj_capacity=128 if quick else 192)
+            res, dt = run_algo(cfg, jax.random.PRNGKey(1), cobjs,
+                               obj.quadratic_query, obj.quadratic_global_value, rounds)
+            r_hit = rounds_to_target(res.f_values, target)
+            rows.append(Row(
+                name=f"fig1/{name}/C={c_het}",
+                us_per_call=dt / rounds * 1e6,
+                derived=(f"bestF={best_f(res):+.4f};F*={fstar:+.4f};"
+                         f"rounds_to_eps={r_hit};"
+                         f"queries_to_eps={queries_at_round(res, r_hit) if r_hit >= 0 else -1};"
+                         f"queries_total={int(res.queries[-1])}"),
+            ))
+    return rows

@@ -1,0 +1,61 @@
+"""Paper Fig. 2: federated black-box adversarial attack success rate under
+varying client heterogeneity P.
+
+CPU-scale reduction of Appx. E.2: synthetic blob-image victims (no CIFAR in
+the container), 8x8 images (d=64), 3 target images, N=6 clients,
+P in {0.4, 0.8}.  Success = averaged margin < 0 (the paper's criterion).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, algo_config
+from repro.core import algorithms as alg
+from repro.core import model_objectives as mobj
+
+ALGOS = ("fzoos", "fedzo", "scaffold2")
+
+
+def run(quick: bool = True) -> list[Row]:
+    """Success at a MATCHED per-client query budget (the paper's Fig. 2
+    x-axis is queries): each algorithm gets as many rounds as the budget
+    affords, so FZooS's per-round query thrift becomes extra rounds."""
+    n_images = 2 if quick else 5
+    n_clients = 6
+    budget = 900 if quick else 2200
+    rows = []
+    for p_shared in (0.4, 0.8):
+        for name in ALGOS:
+            succ, queries, dt_total, rounds_used = 0, 0, 0.0, 0
+            for img_i in range(n_images):
+                key = jax.random.PRNGKey(100 + img_i)
+                cobjs, _ = mobj.make_attack_objective(
+                    key, n_clients=n_clients, p_shared=p_shared, side=8,
+                    train_per_client=192,
+                )
+                d = int(cobjs.z.shape[-1])
+                cfg = algo_config(name, d, n_clients, local_steps=5, eta=0.02,
+                                  n_features=128, traj_capacity=96,
+                                  active_per_iter=3, active_candidates=30,
+                                  active_round_end=3)
+                rounds = max(budget // cfg.queries_per_round(), 1)
+                rounds_used = rounds
+                t0 = time.time()
+                res = alg.simulate(cfg, jax.random.PRNGKey(img_i), cobjs,
+                                   mobj.attack_query, mobj.attack_global_value, rounds)
+                dt_total += time.time() - t0
+                if float(jnp.min(res.f_values)) < 0:
+                    succ += 1
+                queries += int(res.queries[-1])
+            rows.append(Row(
+                name=f"fig2/{name}/P={p_shared}",
+                us_per_call=dt_total / max(rounds_used * n_images, 1) * 1e6,
+                derived=(f"success_rate={succ / n_images:.2f};"
+                         f"rounds={rounds_used};"
+                         f"queries_per_client={queries // n_images}"),
+            ))
+    return rows

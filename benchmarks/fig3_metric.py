@@ -1,0 +1,47 @@
+"""Paper Fig. 3 (+10-12): federated non-differentiable metric optimization
+(1 - precision) under varying P.
+
+CPU-scale reduction of Appx. E.3: Covertype stand-in tabular task, N=7
+clients as in the paper, perturbing the trained MLP's output layer.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, algo_config
+from repro.core import algorithms as alg
+from repro.core import model_objectives as mobj
+
+ALGOS = ("fzoos", "fedzo", "scaffold2")
+
+
+def run(quick: bool = True) -> list[Row]:
+    n_clients = 7
+    rounds = 8 if quick else 20
+    rows = []
+    for p_shared in (0.6, 1.0):
+        key = jax.random.PRNGKey(7)
+        cobjs, d = mobj.make_metric_objective(key, n_clients=n_clients,
+                                              p_shared=p_shared, n_eval=192)
+        base = float(mobj.metric_global_value(cobjs, jnp.full((d,), 0.5)))
+        for name in ALGOS:
+            cfg = algo_config(name, d, n_clients, local_steps=5, eta=0.02,
+                              n_features=256, traj_capacity=96,
+                              active_per_iter=3, active_candidates=30,
+                              active_round_end=3)
+            t0 = time.time()
+            res = alg.simulate(cfg, jax.random.PRNGKey(1), cobjs,
+                               mobj.metric_query, mobj.metric_global_value, rounds)
+            dt = time.time() - t0
+            rows.append(Row(
+                name=f"fig3/{name}/P={p_shared}",
+                us_per_call=dt / rounds * 1e6,
+                derived=(f"one_minus_precision_init={base:.4f};"
+                         f"best={float(jnp.min(res.f_values)):.4f};"
+                         f"queries={int(res.queries[-1])}"),
+            ))
+    return rows

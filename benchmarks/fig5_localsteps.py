@@ -1,0 +1,36 @@
+"""Paper Fig. 5/7/9: effect of the number T of local updates.
+
+Thm. 2 prediction: at fixed eta, larger T improves communication efficiency
+(fewer rounds to epsilon) with sub-linear gains (term G is T-independent).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, algo_config, best_f, rounds_to_target, run_algo
+from repro.core import objectives as obj
+
+
+def run(quick: bool = True) -> list[Row]:
+    d, n = 40, 5
+    rounds = 16 if quick else 30
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, n, d, 5.0, 0.001)
+    f0 = float(obj.quadratic_global_value(cobjs, jax.numpy.full((d,), 0.5)))
+    fstar = obj.quadratic_fstar(d)
+    target = fstar + 0.35 * (f0 - fstar)
+    rows = []
+    for t_steps in (5, 10) if quick else (5, 10, 20):
+        cfg = algo_config("fzoos", d, n, local_steps=t_steps,
+                          n_features=256, traj_capacity=160)
+        res, dt = run_algo(cfg, jax.random.PRNGKey(1), cobjs,
+                           obj.quadratic_query, obj.quadratic_global_value, rounds)
+        rows.append(Row(
+            name=f"fig5/fzoos/T={t_steps}",
+            us_per_call=dt / rounds * 1e6,
+            derived=(f"bestF={best_f(res):+.4f};"
+                     f"rounds_to_eps={rounds_to_target(res.f_values, target)};"
+                     f"queries_total={int(res.queries[-1])}"),
+        ))
+    return rows

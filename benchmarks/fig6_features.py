@@ -1,0 +1,46 @@
+"""Paper Fig. 6: (a) number M of random features; (b) adaptive vs fixed
+gradient correction.
+
+Thm. 2 prediction: larger M helps more when heterogeneity C is larger;
+the adaptive gamma = 1/t beats fixed gamma = 1 when surrogate error along
+the local horizon matters (Appx. C.3).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, algo_config, best_f, run_algo
+from repro.core import objectives as obj
+import dataclasses
+
+
+def run(quick: bool = True) -> list[Row]:
+    d, n = 40, 5
+    rounds = 14 if quick else 30
+    rows = []
+    for c_het in (5.0, 50.0):
+        key = jax.random.PRNGKey(0)
+        cobjs = obj.make_quadratic(key, n, d, c_het, 0.001)
+        # (a) M ablation
+        for m in (64, 512):
+            cfg = algo_config("fzoos", d, n, n_features=m, traj_capacity=160)
+            res, dt = run_algo(cfg, jax.random.PRNGKey(1), cobjs,
+                               obj.quadratic_query, obj.quadratic_global_value, rounds)
+            rows.append(Row(
+                name=f"fig6a/fzoos/C={c_het}/M={m}",
+                us_per_call=dt / rounds * 1e6,
+                derived=f"bestF={best_f(res):+.4f};lastF={float(res.f_values[-1]):+.4f}",
+            ))
+        # (b) adaptive (1/t) vs fixed (gamma = 1) correction length
+        for mode, gconst, label in (("inv_t", 1.0, "adaptive_1_over_t"), ("const", 1.0, "fixed_1")):
+            cfg = algo_config("fzoos", d, n, n_features=256, traj_capacity=160)
+            cfg = dataclasses.replace(cfg, gamma_mode=mode, gamma_const=gconst)
+            res, dt = run_algo(cfg, jax.random.PRNGKey(1), cobjs,
+                               obj.quadratic_query, obj.quadratic_global_value, rounds)
+            rows.append(Row(
+                name=f"fig6b/fzoos/C={c_het}/{label}",
+                us_per_call=dt / rounds * 1e6,
+                derived=f"bestF={best_f(res):+.4f};lastF={float(res.f_values[-1]):+.4f}",
+            ))
+    return rows

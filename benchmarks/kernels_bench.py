@@ -1,0 +1,56 @@
+"""Microbenchmarks for the surrogate hot loops at the paper's real-world
+dims (Covertype: d=2189, M up to 1e4; trajectory windows 128-512).
+
+On CPU the Pallas kernels execute via the jnp oracle path (interpret mode is
+a correctness tool, not a perf path); the numbers here are the CPU substrate
+baseline that the TPU kernels replace.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, iters=5):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def run(quick: bool = True) -> list[Row]:
+    key = jax.random.PRNGKey(0)
+    cases = [
+        ("covertype", 128, 2189, 1000),
+        ("synthetic", 256, 300, 512),
+    ]
+    if not quick:
+        cases.append(("covertype_bigM", 512, 2189, 10000))
+    rows = []
+    for label, n, d, m in cases:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        x = jax.random.normal(k1, (n, d))
+        v = jax.random.normal(k2, (m, d))
+        b = jax.random.uniform(k3, (m,), maxval=6.28)
+        w = jax.random.normal(k4, (m,))
+
+        t_feat = _timeit(jax.jit(lambda x, v, b: ops.rff_features(x, v, b)), x, v, b)
+        t_grad = _timeit(jax.jit(lambda x, v, b, w: ops.rff_grad(x, v, b, w)), x, v, b, w)
+        t_gram = _timeit(jax.jit(lambda a, c: ops.sqexp(a, c, 1.0)), x, x)
+
+        flops_feat = 2 * n * d * m
+        rows.append(Row(f"kernels/rff_features/{label}", t_feat * 1e6,
+                        f"n={n};d={d};M={m};gflops={flops_feat / t_feat / 1e9:.2f}"))
+        rows.append(Row(f"kernels/rff_grad/{label}", t_grad * 1e6,
+                        f"n={n};d={d};M={m};gflops={2 * flops_feat / t_grad / 1e9:.2f}"))
+        rows.append(Row(f"kernels/sqexp_gram/{label}", t_gram * 1e6,
+                        f"n={n};d={d};gflops={2 * n * n * d / t_gram / 1e9:.2f}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point (deliverable d).
+
+One module per paper table/figure + the roofline table + kernel microbench.
+Prints ``name,us_per_call,derived`` CSV per row.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
+    REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only fig1,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+MODULES = {
+    "fig1": "benchmarks.fig1_synthetic",
+    "fig2": "benchmarks.fig2_attack",
+    "fig3": "benchmarks.fig3_metric",
+    "fig4": "benchmarks.fig4_disparity",
+    "fig5": "benchmarks.fig5_localsteps",
+    "fig6": "benchmarks.fig6_features",
+    "thm1": "benchmarks.thm1_rates",
+    "kernels": "benchmarks.kernels_bench",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    quick = not (args.full or os.environ.get("REPRO_BENCH_FULL"))
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        import importlib
+
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(MODULES[name])
+            rows = mod.run(quick=quick)
+            for row in rows:
+                print(row.csv(), flush=True)
+            print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n# " + traceback.format_exc().replace("\n", "\n# "),
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

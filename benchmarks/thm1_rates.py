@@ -1,0 +1,61 @@
+"""Thm. 1 / Appx. D rate check: gradient-estimation error vs query budget.
+
+Paper claim: the trajectory-informed surrogate's error contracts
+(geometrically in the uncertainty, term (1) of Thm. 1) as queries accumulate,
+while FD improves only at O(1/Q) **and carries an irreducible bias floor
+Lambda** (Prop. D.1, eq. 86).  We measure ||estimate - grad f||^2 on one
+client's quadratic at matched query budgets.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import fd as fdlib
+from repro.core import gp_surrogate as gp
+from repro.core import objectives as obj
+
+
+def run(quick: bool = True) -> list[Row]:
+    d = 20
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, 1, d, 0.0, noise_std=0.001)
+    cp = jax.tree_util.tree_map(lambda a: a[0], cobjs)
+    xq = jnp.full((d,), 0.5)
+    true = obj.quadratic_grad(cp, xq)
+    tn = float(jnp.linalg.norm(true))
+
+    budgets = (16, 64, 256) if quick else (16, 64, 256, 1024)
+    rows = []
+    t0 = time.time()
+    for n_q in budgets:
+        # GP surrogate: n_q queries spread around the iterate (the
+        # trajectory an FZooS client would accumulate locally)
+        kq = jax.random.fold_in(key, n_q)
+        xs = jnp.clip(xq + 0.05 * jax.random.normal(kq, (n_q, d)), 0, 1)
+        ys = jax.vmap(lambda x, k: obj.quadratic_query(cp, x, k))(
+            xs, jax.random.split(jax.random.fold_in(kq, 1), n_q)
+        )
+        traj = gp.traj_append_batch(gp.traj_init(n_q, d), xs, ys)
+        hyper = gp.default_hyper(0.5, 1e-5)
+        g_gp = gp.grad_mean(traj, hyper, xq)
+        err_gp = float(jnp.sum((g_gp - true) ** 2))
+
+        # FD with the same total budget: Q = n_q - 1 directions
+        dirs = fdlib.sample_directions(jax.random.fold_in(key, 100 + n_q), n_q - 1, d)
+        g_fd = fdlib.fd_grad(obj.quadratic_query, cp, xq,
+                             jax.random.fold_in(key, 200 + n_q), dirs, 5e-3)
+        err_fd = float(jnp.sum((g_fd - true) ** 2))
+
+        rows.append(Row(
+            name=f"thm1/queries={n_q}",
+            us_per_call=(time.time() - t0) / len(rows or [1]) * 1e6,
+            derived=(f"gp_err={err_gp:.5f};fd_err={err_fd:.5f};"
+                     f"ratio={err_fd / max(err_gp, 1e-12):.1f};grad_norm2={tn * tn:.4f}"),
+        ))
+    return rows

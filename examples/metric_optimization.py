@@ -1,0 +1,38 @@
+"""Federated non-differentiable metric optimization (paper Sec. 6.3,
+CPU-scaled): fine-tune a trained MLP's output layer to optimize macro
+precision using only metric queries, across 7 heterogeneous clients.
+
+    PYTHONPATH=src python examples/metric_optimization.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import algorithms as alg
+from repro.core import model_objectives as mobj
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n_clients, p_shared = 7, 0.7
+    cobjs, d = mobj.make_metric_objective(key, n_clients=n_clients, p_shared=p_shared)
+    x0 = jnp.full((d,), 0.5)
+    base = float(mobj.metric_global_value(cobjs, x0))
+    print(f"metric opt: d={d} (output layer), N={n_clients}, P={p_shared}")
+    print(f"1 - precision at theta*: {base:.4f}\n")
+
+    for name in ("fzoos", "fedzo"):
+        cfg = alg.AlgoConfig(
+            name=name, dim=d, n_clients=n_clients, local_steps=5, eta=0.02,
+            q=20, fd_lambda=5e-3, n_features=256, traj_capacity=96,
+            active_per_iter=3, active_candidates=30, active_round_end=3,
+            lengthscale=0.5, noise=1e-5,
+        )
+        res = alg.simulate(cfg, jax.random.PRNGKey(1), cobjs,
+                           mobj.metric_query, mobj.metric_global_value, rounds=10)
+        print(f"== {name} ==  best 1-precision = {float(jnp.min(res.f_values)):.4f} "
+              f"({int(res.queries[-1])} queries/client)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense LM on the
+synthetic token pipeline for a few hundred steps, checkpointing as it goes.
+
+This instantiates a REAL mid-size config (qwen1.5-family geometry at ~100M:
+12L, d=640, vocab 32k) rather than a toy, and shows the full substrate:
+config -> init -> sharded train loop -> checkpoint -> restore.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+(CPU: ~1-2 s/step; pass --steps 20 for a smoke run.)
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.checkpoint import restore_train_state, save_train_state
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTextConfig, synthetic_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import init_train_state, train_step
+from repro.models.params import count_params
+from repro.optim import warmup_cosine_schedule
+from repro.sharding.rules import ShardingPolicy, mesh_context
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen1_5_0_5b", "full"),
+        name="qwen-100m", n_layers=12, d_model=640, n_heads=10, n_kv_heads=10,
+        head_dim=64, d_ff=1792, vocab_size=32768,
+    )
+    print(f"model: {cfg.name}  params = {count_params(cfg) / 1e6:.1f}M")
+
+    policy = ShardingPolicy(remat=False)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    sched = warmup_cosine_schedule(3e-4, 20, args.steps)
+    dcfg = SyntheticTextConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                               batch_size=args.batch_size, seed=0)
+    step_fn = jax.jit(lambda p, o, b, lr: train_step(p, o, cfg, b, policy, lr))
+
+    with mesh_context(make_host_mesh()):
+        t0 = time.time()
+        for step in range(args.steps):
+            params, opt, m = step_fn(params, opt, synthetic_batch(dcfg, step), sched(step))
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                      f"grad_norm {float(m['grad_norm']):.2f}  "
+                      f"{(time.time() - t0):.0f}s", flush=True)
+        save_train_state(args.ckpt_dir, args.steps, params, opt,
+                         {"loss": float(m["loss"])})
+    print(f"checkpointed to {args.ckpt_dir}")
+
+    # prove restore round-trips
+    p2, o2, s = restore_train_state(args.ckpt_dir, params, opt)
+    print(f"restored step {s}; params identical:",
+          all((a == b).all() for a, b in zip(
+              jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.checkpoint.io import (  # noqa: F401
+    latest_step,
+    restore,
+    restore_train_state,
+    save,
+    save_train_state,
+)

@@ -1,0 +1,100 @@
+"""Pytree checkpointing to .npz with a JSON treedef sidecar (no orbax in the
+environment).
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json
+Arbitrary pytrees (flat dicts, NamedTuples, nested) round-trip through
+``jax.tree_util`` flattening; bfloat16 leaves are stored as uint16 views with
+a dtype tag so numpy's npz (which lacks bf16) stays lossless.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(x))
+    if str(arr.dtype) == _BF16:
+        return arr.view(np.uint16), _BF16
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, tag: str):
+    if tag == _BF16:
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(arr)
+
+
+def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays, tags = {}, []
+    for i, leaf in enumerate(leaves):
+        arr, tag = _to_numpy(leaf)
+        arrays[f"leaf_{i}"] = arr
+        tags.append(tag)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "dtypes": tags}
+    if step is not None:
+        meta["step"] = step
+    if extra_meta:
+        meta["extra"] = extra_meta
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(path: str, like: Any, step: int | None = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    if step is not None:
+        path = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves_like) != meta["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {meta['n_leaves']} leaves, template has {len(leaves_like)}"
+        )
+    leaves = [
+        _from_numpy(data[f"leaf_{i}"], meta["dtypes"][i]) for i in range(meta["n_leaves"])
+    ]
+    for got, want in zip(leaves, leaves_like):
+        if tuple(got.shape) != tuple(want.shape):
+            raise ValueError(f"shape mismatch {got.shape} vs {want.shape}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(root)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def save_train_state(root: str, step: int, params, opt_state, metrics: dict | None = None) -> str:
+    return save(root, {"params": params, "opt": opt_state}, step=step, extra_meta=metrics)
+
+
+def restore_train_state(root: str, params_like, opt_like, step: int | None = None):
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    tree = restore(root, {"params": params_like, "opt": opt_like}, step=step)
+    return tree["params"], tree["opt"], step

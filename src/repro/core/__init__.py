@@ -1,0 +1,39 @@
+"""The paper's contribution: FZooS -- federated zeroth-order optimization with
+trajectory-informed surrogate gradients -- plus the baselines it compares to.
+"""
+
+from repro.core.algorithms import (  # noqa: F401
+    ALGORITHMS,
+    AlgoConfig,
+    ClientState,
+    RoundStats,
+    SimResult,
+    disparity,
+    init_states,
+    optimal_gamma_star,
+    run_round,
+    simulate,
+)
+from repro.core.gp_surrogate import (  # noqa: F401
+    GPHyper,
+    Trajectory,
+    default_hyper,
+    grad_mean,
+    grad_mean_batch,
+    grad_uncertainty_batch,
+    grad_uncertainty_trace,
+    select_active_queries,
+    sqexp,
+    traj_append,
+    traj_append_batch,
+    traj_init,
+)
+from repro.core.rff import (  # noqa: F401
+    RFFParams,
+    approx_kernel,
+    features,
+    fit_w,
+    grad_features_t_w,
+    grad_features_t_w_batch,
+    make_rff,
+)

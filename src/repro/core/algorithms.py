@@ -1,0 +1,414 @@
+"""Federated ZOO algorithms under the paper's unified update (eq. 2):
+
+    ghat^(i)_{r,t-1} = g^(i)_{r,t-1} + gamma * ( g_{r-1}(x') - g^(i)_{r-1}(x'') )
+
+Instances (Sec. 3.1 + Appx. D):
+
+  fzoos      g = derived-GP surrogate grad_mu at the CURRENT iterate,
+             correction = grad_muhat_global(x) - grad_muhat_local(x) via RFF,
+             gamma adaptive (1/t practical choice, Cor. C.1)        [Algo. 2]
+  fedzo      g = finite difference, gamma = 0                        [2]
+  fedprox    g = finite difference, correction = x - x_{r-1}, gamma=mu [4]
+  scaffold1  g = FD, correction = mean_j FD_j(x_{r-1}) - FD_i(x_{r-1}), gamma=1
+  scaffold2  g = FD, correction = round-averaged FD gradients, gamma=1
+
+The round structure mirrors Algo. 1/2 exactly: T collective-free local steps
+per client, one x-aggregation, then (FZooS) round-end active queries, the RFF
+re-fit and one w-aggregation -- i.e. the paper's one-or-two transmissions per
+round.  ``mean_fn`` abstracts the server aggregation so the same code runs
+under single-process vmap simulation and under shard_map on a device mesh
+(see repro.core.federated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fd as fdlib
+from repro.core import gp_surrogate as gp
+from repro.core import rff as rfflib
+from repro.optim import make_optimizer
+
+Pytree = Any
+QueryFn = Callable[..., jax.Array]
+MeanFn = Callable[[Pytree], Pytree]
+
+ALGORITHMS = ("fzoos", "fedzo", "fedprox", "scaffold1", "scaffold2")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoConfig:
+    """Static (hashable) algorithm configuration."""
+
+    name: str
+    dim: int
+    n_clients: int
+    eta: float = 0.01
+    local_steps: int = 10  # T
+    optimizer: str = "adam"  # paper Appx. E: Adam, lr 0.01
+    # finite-difference baselines
+    q: int = 20
+    fd_lambda: float = 5e-3  # FD probe; must sit below curvature scale (see tests)
+    # FedProx proximal coefficient (its gamma in eq. 2)
+    prox_mu: float = 1.0
+    # FZooS surrogate machinery
+    n_features: int = 512  # M
+    traj_capacity: int = 128
+    lengthscale: float = 1.0
+    noise: float = 1e-4
+    gamma_mode: str = "inv_t"  # inv_t | const  (Cor. C.1 practical choice)
+    gamma_const: float = 1.0
+    active_per_iter: int = 5
+    active_candidates: int = 100
+    active_radius: float = 0.01
+    active_round_end: int = 5
+    # domain
+    lo: float = 0.0
+    hi: float = 1.0
+
+    def __post_init__(self):
+        if self.name not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.name!r}; choose from {ALGORITHMS}")
+
+    @property
+    def is_fzoos(self) -> bool:
+        return self.name == "fzoos"
+
+    @property
+    def uses_fd(self) -> bool:
+        return self.name in ("fedzo", "fedprox", "scaffold1", "scaffold2")
+
+    def queries_per_round(self) -> int:
+        """Static per-client query count per round (EXPERIMENTS.md bookkeeping)."""
+        t = self.local_steps
+        if self.is_fzoos:
+            return t * (1 + self.active_per_iter) + self.active_round_end
+        per_iter = fdlib.fd_queries(self.q)
+        extra = fdlib.fd_queries(self.q) if self.name == "scaffold1" else 0
+        return t * per_iter + extra
+
+    def comm_floats_per_round(self) -> int:
+        """Client->server payload floats per round (communication claim)."""
+        base = self.dim  # the iterate
+        if self.is_fzoos:
+            return base + self.n_features  # + w^(i)  (Sec. 4.2.1)
+        if self.name in ("scaffold1", "scaffold2"):
+            return base + self.dim  # + control variate
+        return base
+
+
+class ClientState(NamedTuple):
+    x: jax.Array  # (d,)
+    traj: gp.Trajectory  # ring buffer (fzoos; 1-slot dummy otherwise)
+    w_local: jax.Array  # (M,) RFF weights of own surrogate at end of prev round
+    w_global: jax.Array  # (M,) server-averaged weights
+    c_local: jax.Array  # (d,) SCAFFOLD control variate
+    c_global: jax.Array  # (d,)
+    fd_bank: jax.Array  # (Q, d) shared direction bank (scaffold2, Prop. D.4)
+    fd_accum: jax.Array  # (d,) running sum of FD grads this round (scaffold2)
+    opt: Any  # local optimizer state
+    queries: jax.Array  # () int32 cumulative per-client query counter
+    key: jax.Array
+
+
+class RoundStats(NamedTuple):
+    server_x: jax.Array  # (d,) aggregated iterate after the round
+    mean_cos: jax.Array  # () mean cos(ghat, grad F) over clients x iters (diag)
+    mean_disparity: jax.Array  # () mean ||ghat - grad F||^2 (Thm. 1 Xi)
+    queries_per_client: jax.Array  # () mean cumulative queries
+
+
+def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientState:
+    cap = cfg.traj_capacity if cfg.is_fzoos else 1
+    m = cfg.n_features if cfg.is_fzoos else 1
+    qd = cfg.q if cfg.name == "scaffold2" else 1
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    # The shared direction bank must be identical across clients (Prop. D.4):
+    # derive it from a constant key, not the per-client key.
+    bank = fdlib.sample_directions(jax.random.PRNGKey(12345), qd, cfg.dim)
+    return ClientState(
+        x=x0,
+        traj=gp.traj_init(cap, cfg.dim),
+        w_local=jnp.zeros((m,), jnp.float32),
+        w_global=jnp.zeros((m,), jnp.float32),
+        c_local=jnp.zeros((cfg.dim,), jnp.float32),
+        c_global=jnp.zeros((cfg.dim,), jnp.float32),
+        fd_bank=bank,
+        fd_accum=jnp.zeros((cfg.dim,), jnp.float32),
+        opt=opt_init(x0),
+        queries=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def init_states(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientState:
+    """Stacked states for all clients (leading axis N)."""
+    keys = jax.random.split(key, cfg.n_clients)
+    return jax.vmap(lambda k: init_client_state(cfg, k, x0))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Local phase: T collective-free steps on one client
+# ---------------------------------------------------------------------------
+
+
+def _estimate_gradient(
+    cfg: AlgoConfig,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: QueryFn,
+    cobj,
+    st: ClientState,
+    server_x: jax.Array,
+    t: jax.Array,
+    key: jax.Array,
+) -> tuple[jax.Array, ClientState]:
+    """ghat^(i)_{r,t-1} per eq. (2)/(8).  Returns (ghat, state-with-queries)."""
+    x = st.x
+    if cfg.is_fzoos:
+        hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
+        g_loc = gp.grad_mean(st.traj, hyper, x)
+        corr = rfflib.grad_features_t_w(rff, x, st.w_global) - rfflib.grad_features_t_w(rff, x, st.w_local)
+        if cfg.gamma_mode == "inv_t":
+            gamma = 1.0 / t.astype(jnp.float32)  # Cor. C.1 practical choice
+        else:
+            gamma = jnp.asarray(cfg.gamma_const, jnp.float32)
+        return g_loc + gamma * corr, st
+
+    # FD family.  (Prop. D.4 analyzes SCAFFOLD-II under a shared direction
+    # bank; with Q < d that traps the iterate in a Q-dim subspace forever,
+    # so the executable algorithm samples fresh directions like the others.)
+    key, kd = jax.random.split(key)
+    dirs = fdlib.sample_directions(kd, cfg.q, cfg.dim)
+    g_fd = fdlib.fd_grad(query_fn, cobj, x, key, dirs, cfg.fd_lambda)
+    st = st._replace(queries=st.queries + fdlib.fd_queries(cfg.q))
+    if cfg.name == "fedzo":
+        return g_fd, st
+    if cfg.name == "fedprox":
+        return g_fd + cfg.prox_mu * (x - server_x), st
+    # scaffold1 / scaffold2: gamma = 1 control-variate correction
+    st = st._replace(fd_accum=st.fd_accum + g_fd)
+    return g_fd + (st.c_global - st.c_local), st
+
+
+def _local_phase(
+    cfg: AlgoConfig,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: QueryFn,
+    cobj,
+    st: ClientState,
+    server_x: jax.Array,
+    diag_global_grad: Optional[Callable[[jax.Array], jax.Array]],
+) -> tuple[ClientState, jax.Array, jax.Array]:
+    """Run T local steps.  Returns (state, sum_cos, sum_disparity)."""
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    def step(carry, t):
+        st: ClientState = carry
+        key, k_obs, k_act, k_est = jax.random.split(st.key, 4)
+        st = st._replace(key=key)
+
+        if cfg.is_fzoos:
+            # Trajectory-informed: query the current iterate (+ active queries)
+            # BEFORE estimating -- the estimate is conditioned on D_{r,t-1}.
+            y = query_fn(cobj, st.x, k_obs)
+            traj = gp.traj_append(st.traj, st.x, y)
+            n_q = 1
+            if cfg.active_per_iter > 0:
+                hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
+                cands = gp.select_active_queries(
+                    k_act, traj, hyper, st.x, cfg.active_candidates, cfg.active_per_iter,
+                    cfg.active_radius, cfg.lo, cfg.hi,
+                )
+                kq = jax.random.split(jax.random.fold_in(k_act, 1), cfg.active_per_iter)
+                ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
+                traj = gp.traj_append_batch(traj, cands, ys)
+                n_q += cfg.active_per_iter
+            st = st._replace(traj=traj, queries=st.queries + n_q)
+
+        ghat, st = _estimate_gradient(cfg, rff, query_fn, cobj, st, server_x, t, k_est)
+        new_x, new_opt = opt_update(st.opt, ghat, st.x, cfg.eta)
+        new_x = jnp.clip(new_x, cfg.lo, cfg.hi)
+
+        if diag_global_grad is not None:
+            gf = diag_global_grad(st.x)
+            cos = jnp.dot(ghat, gf) / (jnp.linalg.norm(ghat) * jnp.linalg.norm(gf) + 1e-12)
+            disp = jnp.sum((ghat - gf) ** 2)
+        else:
+            cos = jnp.zeros(())
+            disp = jnp.zeros(())
+
+        st = st._replace(x=new_x, opt=new_opt)
+        return st, (cos, disp)
+
+    ts = jnp.arange(1, cfg.local_steps + 1)
+    st, (coss, disps) = jax.lax.scan(step, st, ts)
+    return st, jnp.sum(coss), jnp.sum(disps)
+
+
+# ---------------------------------------------------------------------------
+# One full communication round (Algo. 1 / Algo. 2)
+# ---------------------------------------------------------------------------
+
+
+def run_round(
+    cfg: AlgoConfig,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: QueryFn,
+    cobjs,  # stacked per-client objective params (leading axis = local clients)
+    states: ClientState,  # stacked states (leading axis = local clients)
+    server_x: jax.Array,  # (d,)
+    mean_fn: MeanFn,  # server aggregation over ALL clients
+    diag_global_grad: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> tuple[ClientState, RoundStats]:
+    opt_init, _ = make_optimizer(cfg.optimizer)
+
+    # ---- prologue: broadcast x_r, reset local optimizers ----
+    def prologue(st: ClientState, cobj) -> ClientState:
+        st = st._replace(x=server_x, opt=opt_init(server_x), fd_accum=jnp.zeros_like(server_x))
+        if cfg.name == "scaffold1":
+            # c_i <- FD estimate at x_{r-1}; requires one extra transmission
+            # (SCAFFOLD Type I per Appx. D).
+            key, kd, kf = jax.random.split(st.key, 3)
+            dirs = fdlib.sample_directions(kd, cfg.q, cfg.dim)
+            c_i = fdlib.fd_grad(query_fn, cobj, server_x, kf, dirs, cfg.fd_lambda)
+            st = st._replace(key=key, c_local=c_i, queries=st.queries + fdlib.fd_queries(cfg.q))
+        return st
+
+    states = jax.vmap(prologue)(states, cobjs)
+    if cfg.name == "scaffold1":
+        c_glob = mean_fn(states.c_local)
+        states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
+
+    # ---- T local steps on every client in parallel ----
+    local = partial(_local_phase, cfg, rff, query_fn)
+    states, sum_cos, sum_disp = jax.vmap(
+        lambda cobj, st: local(cobj, st, server_x, diag_global_grad)
+    )(cobjs, states)
+
+    # ---- server aggregation of the iterates (line 7/9 of Algo. 1/2) ----
+    new_server_x = mean_fn(states.x)
+
+    # ---- post phase ----
+    def post(st: ClientState, cobj) -> ClientState:
+        st = st._replace(x=new_server_x)
+        if cfg.is_fzoos:
+            key, k_act = jax.random.split(st.key)
+            st = st._replace(key=key)
+            traj = st.traj
+            if cfg.active_round_end > 0:
+                # Active queries around x_r (line 7 of Algo. 2) sharpen the
+                # correction term (2) in Thm. 1 before w is fitted & shipped.
+                hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
+                cands = gp.select_active_queries(
+                    k_act, traj, hyper, new_server_x, cfg.active_candidates,
+                    cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
+                )
+                kq = jax.random.split(jax.random.fold_in(k_act, 2), cfg.active_round_end)
+                ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
+                traj = gp.traj_append_batch(traj, cands, ys)
+                st = st._replace(traj=traj, queries=st.queries + cfg.active_round_end)
+            hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
+            w_i = rfflib.fit_w(rff, traj, hyper)
+            st = st._replace(w_local=w_i)
+        elif cfg.name == "scaffold2":
+            st = st._replace(c_local=st.fd_accum / cfg.local_steps)
+        return st
+
+    states = jax.vmap(post)(states, cobjs)
+
+    # ---- second aggregation: w (FZooS) / control variates (scaffold2) ----
+    if cfg.is_fzoos:
+        w_glob = mean_fn(states.w_local)
+        states = states._replace(w_global=jnp.broadcast_to(w_glob, states.w_global.shape))
+    elif cfg.name == "scaffold2":
+        c_glob = mean_fn(states.c_local)
+        states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
+
+    denom = cfg.local_steps * max(cfg.n_clients, 1)
+    stats = RoundStats(
+        server_x=new_server_x,
+        mean_cos=mean_fn(sum_cos) / cfg.local_steps,
+        mean_disparity=mean_fn(sum_disp) / cfg.local_steps,
+        queries_per_client=mean_fn(states.queries.astype(jnp.float32)),
+    )
+    del denom
+    return states, stats
+
+
+# ---------------------------------------------------------------------------
+# Single-process simulation driver
+# ---------------------------------------------------------------------------
+
+
+class SimResult(NamedTuple):
+    xs: jax.Array  # (R+1, d) server iterates
+    f_values: jax.Array  # (R+1,) F(x_r)
+    queries: jax.Array  # (R,) cumulative mean queries per client
+    mean_cos: jax.Array  # (R,)
+    mean_disparity: jax.Array  # (R,)
+
+
+def simulate(
+    cfg: AlgoConfig,
+    key: jax.Array,
+    cobjs,
+    query_fn: QueryFn,
+    global_value_fn: Callable[[Any, jax.Array], jax.Array],
+    rounds: int,
+    x0: Optional[jax.Array] = None,
+    diag_global_grad: Optional[Callable[[jax.Array], jax.Array]] = None,
+    rff_key: Optional[jax.Array] = None,
+) -> SimResult:
+    """Run R communication rounds in a single process (clients via vmap)."""
+    if x0 is None:
+        x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
+    k_init, k_rff, k_rounds = jax.random.split(key, 3)
+    rff = None
+    if cfg.is_fzoos:
+        rff = rfflib.make_rff(rff_key if rff_key is not None else k_rff, cfg.n_features, cfg.dim, cfg.lengthscale)
+    states = init_states(cfg, k_init, x0)
+    mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
+
+    round_jit = jax.jit(
+        lambda states, sx: run_round(cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad)
+    )
+
+    xs = [x0]
+    fvals = [global_value_fn(cobjs, x0)]
+    queries, coss, disps = [], [], []
+    sx = x0
+    for _ in range(rounds):
+        states, stats = round_jit(states, sx)
+        sx = stats.server_x
+        xs.append(sx)
+        fvals.append(global_value_fn(cobjs, sx))
+        queries.append(stats.queries_per_client)
+        coss.append(stats.mean_cos)
+        disps.append(stats.mean_disparity)
+
+    return SimResult(
+        xs=jnp.stack(xs),
+        f_values=jnp.stack(fvals),
+        queries=jnp.stack(queries),
+        mean_cos=jnp.stack(coss),
+        mean_disparity=jnp.stack(disps),
+    )
+
+
+def optimal_gamma_star(
+    grad_f_global: jax.Array, g_local: jax.Array, correction: jax.Array
+) -> jax.Array:
+    """Prop. 1 closed-form optimal correction length gamma*."""
+    drift = grad_f_global - g_local
+    denom = jnp.sum(correction * correction)
+    return jnp.dot(drift, correction) / jnp.maximum(denom, 1e-30)
+
+
+def disparity(ghat: jax.Array, grad_f_global: jax.Array) -> jax.Array:
+    """Xi = ||ghat - grad F||^2 (Sec. 3.2)."""
+    return jnp.sum((ghat - grad_f_global) ** 2)

@@ -1,0 +1,46 @@
+"""Finite-difference gradient estimation (paper eq. 3) -- the query-hungry
+baseline estimator used by FedZO / FedProx / SCAFFOLD in the federated-ZOO
+setting.
+
+    Delta(x) = (1/Q) sum_q  (y(x + lam u_q) - y(x)) / lam * u_q
+
+Each call consumes Q+1 function queries (Q perturbed + 1 at x); the paper's
+query-inefficiency challenge (Sec. 3.2) is exactly this NTQ-per-round cost.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+QueryFn = Callable[..., jax.Array]  # (client_obj, x, key) -> noisy scalar
+
+
+def sample_directions(key: jax.Array, q: int, dim: int) -> jax.Array:
+    """u_q ~ N(0, I) as in the paper (Lemma D.1)."""
+    return jax.random.normal(key, (q, dim))
+
+
+def fd_grad(
+    query_fn: QueryFn,
+    client_obj,
+    x: jax.Array,
+    key: jax.Array,
+    directions: jax.Array,
+    lam: float,
+) -> jax.Array:
+    """Finite-difference estimate of grad f at x.  directions: (Q, d)."""
+    q = directions.shape[0]
+    kbase, kpert = jax.random.split(key)
+    y0 = query_fn(client_obj, x, kbase)
+    pert_keys = jax.random.split(kpert, q)
+    ys = jax.vmap(lambda u, k: query_fn(client_obj, x + lam * u, k))(directions, pert_keys)
+    coef = (ys - y0) / lam  # (Q,)
+    return (coef[:, None] * directions).sum(axis=0) / q
+
+
+def fd_queries(q: int) -> int:
+    """Queries consumed per fd_grad call."""
+    return q + 1

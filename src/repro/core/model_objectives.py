@@ -1,0 +1,333 @@
+"""Model-backed federated ZOO objectives -- the paper's real-world tasks.
+
+1. Federated black-box adversarial attack (Sec. 6.2): N private classifiers
+   trained on P-controlled label subsets; the ZOO input x is an image
+   perturbation, the local function is client i's margin on z + x (lower is
+   better; attack succeeds when the AVERAGE margin < 0).  No CIFAR ships in
+   this container, so victims train on a synthetic blob-image task -- the
+   optimization interface (query-only margins, P heterogeneity) is the
+   paper's exactly.
+
+2. Federated non-differentiable metric optimization (Sec. 6.3): a fully
+   trained MLP is fine-tuned by perturbing its parameters to optimize
+   1 - precision on each client's label subset (Covertype stand-in:
+   synthetic 7-class tabular data).
+
+3. LM-backbone objective (framework integration, DESIGN.md Sec. 4): the ZOO
+   input reparameterizes a low-dim slice of ANY architecture-zoo model
+   (theta = theta0 + scale * (x - 1/2) on the final-norm gains) and the local
+   function is the client's own token-batch loss -- this is what
+   launch/fedzoo.py --arch <id> runs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import label_subset_partition
+from repro.models.config import ModelConfig
+from repro.models.model import lm_loss
+from repro.optim import adam_init, adam_update
+from repro.sharding.rules import ShardingPolicy
+
+
+# ---------------------------------------------------------------------------
+# shared tiny-MLP machinery (victims + metric model)
+# ---------------------------------------------------------------------------
+
+
+class MLPParams(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+def mlp_init(key: jax.Array, d_in: int, d_hidden: int, n_classes: int) -> MLPParams:
+    k1, k2 = jax.random.split(key)
+    return MLPParams(
+        w1=jax.random.normal(k1, (d_in, d_hidden)) / np.sqrt(d_in),
+        b1=jnp.zeros((d_hidden,)),
+        w2=jax.random.normal(k2, (d_hidden, n_classes)) / np.sqrt(d_hidden),
+        b2=jnp.zeros((n_classes,)),
+    )
+
+
+def mlp_logits(p: MLPParams, x: jax.Array) -> jax.Array:
+    h = jnp.tanh(x @ p.w1 + p.b1)
+    return h @ p.w2 + p.b2
+
+
+def _train_mlp(key, p: MLPParams, xs, ys, steps=300, lr=5e-3) -> MLPParams:
+    opt = adam_init(p)
+
+    def loss_fn(p):
+        lg = mlp_logits(p, xs)
+        return -jnp.mean(
+            jax.nn.log_softmax(lg)[jnp.arange(xs.shape[0]), ys]
+        )
+
+    @jax.jit
+    def step(p, opt):
+        g = jax.grad(loss_fn)(p)
+        return adam_update(opt, g, p, lr)
+
+    for _ in range(steps):
+        p, opt = step(p, opt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# synthetic datasets
+# ---------------------------------------------------------------------------
+
+
+def blob_images(key: jax.Array, n: int, side: int = 16, n_classes: int = 10):
+    """Class = a fixed spatial Gaussian-blob template + noise."""
+    kt, kl, kn = jax.random.split(key, 3)
+    ii, jj = jnp.meshgrid(jnp.arange(side), jnp.arange(side), indexing="ij")
+    centers = jax.random.uniform(kt, (n_classes, 2), minval=3.0, maxval=side - 3.0)
+    widths = jax.random.uniform(jax.random.fold_in(kt, 1), (n_classes,), minval=2.0, maxval=4.0)
+    templates = jnp.exp(
+        -((ii[None] - centers[:, 0, None, None]) ** 2 + (jj[None] - centers[:, 1, None, None]) ** 2)
+        / (2 * widths[:, None, None] ** 2)
+    )  # (C, side, side)
+    labels = jax.random.randint(kl, (n,), 0, n_classes)
+    imgs = templates[labels] + 0.3 * jax.random.normal(kn, (n, side, side))
+    return imgs.reshape(n, side * side), labels
+
+
+def tabular_covertype_like(key: jax.Array, n: int, d: int = 54, n_classes: int = 7):
+    """Covertype stand-in: overlapping classes hard enough that the trained
+    MLP sits visibly below 100% precision (so ZOO fine-tuning has headroom)."""
+    kw, kx, kn = jax.random.split(key, 3)
+    protos = jax.random.normal(kw, (n_classes, d))
+    labels = jax.random.randint(jax.random.fold_in(kx, 1), (n,), 0, n_classes)
+    xs = protos[labels] + 3.5 * jax.random.normal(kn, (n, d))
+    return xs, labels
+
+
+# ---------------------------------------------------------------------------
+# 1) federated black-box adversarial attack (Sec. 6.2)
+# ---------------------------------------------------------------------------
+
+
+class AttackObjective(NamedTuple):
+    """Stacked per-client victims + the target image (shared)."""
+
+    victims: MLPParams  # leading axis N on every leaf
+    z: jax.Array  # (d_img,) target image, shared
+    label: jax.Array  # () true class, shared
+    eps: jax.Array  # () L_inf attack radius (x in [0,1] -> [-eps, eps])
+    noise_std: jax.Array  # ()
+
+
+def make_attack_objective(
+    key: jax.Array,
+    n_clients: int = 10,
+    p_shared: float = 0.5,
+    side: int = 16,
+    n_classes: int = 10,
+    eps: float = 0.3,
+    noise_std: float = 0.001,
+    train_per_client: int = 512,
+) -> tuple[AttackObjective, jax.Array]:
+    """Trains N victims on P-controlled label subsets; picks a target image
+    every victim classifies correctly.  Returns (objective, image)."""
+    kd, kp, kt = jax.random.split(key, 3)
+    xs, ys = blob_images(kd, 4096, side, n_classes)
+    parts = label_subset_partition(np.asarray(ys), n_clients, p_shared, seed=int(kp[0]))
+
+    victims = []
+    for i, idx in enumerate(parts):
+        sub = np.random.default_rng(i).choice(idx, size=min(train_per_client, len(idx)), replace=len(idx) < train_per_client)
+        p0 = mlp_init(jax.random.fold_in(kt, i), side * side, 64, n_classes)
+        victims.append(_train_mlp(jax.random.fold_in(kt, 100 + i), p0, xs[sub], ys[sub]))
+    stacked = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *victims)
+
+    # target: the image with the LARGEST averaged true-class margin -- the
+    # paper's success criterion is on the averaged model, and under strong
+    # P-heterogeneity no single image may be known to every victim.
+    def avg_margin(i):
+        lg = jax.vmap(lambda vp: mlp_logits(vp, xs[i]))(stacked)  # (N, C)
+        true = lg[:, ys[i]]
+        other = jnp.max(lg - 1e9 * jax.nn.one_hot(ys[i], lg.shape[-1])[None], axis=-1)
+        return jnp.mean(true - other)
+
+    margins = jax.vmap(avg_margin)(jnp.arange(256))
+    target = int(jnp.argmax(margins))
+    rep = lambda v: jnp.full((n_clients,), v, jnp.float32)
+    obj = AttackObjective(
+        victims=stacked,
+        z=jnp.broadcast_to(xs[target], (n_clients,) + xs[target].shape),
+        label=jnp.full((n_clients,), ys[target], jnp.int32),
+        eps=rep(eps),
+        noise_std=rep(noise_std),
+    )
+    return obj, xs[target]
+
+
+def attack_margin(cp: AttackObjective, x_unit: jax.Array) -> jax.Array:
+    """f_i(x) = logit_true - max_other logit on z + perturbation.  < 0 ==
+    this client misclassifies.  x_unit in [0,1]^d -> [-eps, eps]^d."""
+    pert = (2.0 * x_unit - 1.0) * cp.eps
+    lg = mlp_logits(cp.victims, cp.z + pert)
+    true = lg[cp.label]
+    other = jnp.max(lg - 1e9 * jax.nn.one_hot(cp.label, lg.shape[-1]), axis=-1)
+    return (true - other) / 10.0  # scale into the |f|<=1 regime of Sec. 2
+
+
+def attack_query(cp: AttackObjective, x_unit: jax.Array, key: jax.Array) -> jax.Array:
+    return attack_margin(cp, x_unit) + cp.noise_std * jax.random.normal(key, ())
+
+
+def attack_global_value(cps: AttackObjective, x_unit: jax.Array) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda cp: attack_margin(cp, x_unit))(cps))
+
+
+def attack_success(cps: AttackObjective, x_unit: jax.Array) -> jax.Array:
+    """Paper's success criterion: the AVERAGED margin misclassifies."""
+    return (attack_global_value(cps, x_unit) < 0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 2) federated non-differentiable metric optimization (Sec. 6.3)
+# ---------------------------------------------------------------------------
+
+
+class MetricObjective(NamedTuple):
+    base: MLPParams  # theta* (shared; stacked for vmap)
+    xs: jax.Array  # (N, n_eval, d) client eval data
+    ys: jax.Array  # (N, n_eval)
+    scale: jax.Array  # () perturbation scale
+    noise_std: jax.Array  # ()
+    n_classes: jax.Array  # ()
+
+
+def make_metric_objective(
+    key: jax.Array,
+    n_clients: int = 7,
+    p_shared: float = 0.7,
+    n_eval: int = 256,
+    scale: float = 0.25,
+    noise_std: float = 0.001,
+) -> tuple[MetricObjective, int]:
+    """Returns (objective, perturbation dim d).  d = size of the output
+    layer (w2, b2) of the fully trained MLP -- the fine-tuned slice."""
+    kd, kt, kp = jax.random.split(key, 3)
+    xs, ys = tabular_covertype_like(kd, 8192)
+    p0 = mlp_init(kt, xs.shape[-1], 16, 7)
+    theta = _train_mlp(jax.random.fold_in(kt, 1), p0, xs[:4096], ys[:4096], steps=150)
+
+    parts = label_subset_partition(np.asarray(ys[4096:]), n_clients, p_shared, seed=int(kp[0]))
+    exs, eys = [], []
+    for i, idx in enumerate(parts):
+        sub = np.random.default_rng(i).choice(idx, size=n_eval, replace=len(idx) < n_eval)
+        exs.append(xs[4096:][sub])
+        eys.append(ys[4096:][sub])
+    rep = lambda v: jnp.full((n_clients,), v, jnp.float32)
+    stacked_theta = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape), theta
+    )
+    obj = MetricObjective(
+        base=stacked_theta,
+        xs=jnp.stack(exs),
+        ys=jnp.stack(eys),
+        scale=rep(scale),
+        noise_std=rep(noise_std),
+        n_classes=rep(7.0),
+    )
+    d = theta.w2.size + theta.b2.size
+    return obj, d
+
+
+def _perturbed(cp: MetricObjective, x_unit: jax.Array) -> MLPParams:
+    delta = (2.0 * x_unit - 1.0) * cp.scale
+    dw = delta[: cp.base.w2.size].reshape(cp.base.w2.shape)
+    db = delta[cp.base.w2.size :].reshape(cp.base.b2.shape)
+    return cp.base._replace(w2=cp.base.w2 + dw, b2=cp.base.b2 + db)
+
+
+def soft_precision(logits: jax.Array, labels: jax.Array, n_classes: int) -> jax.Array:
+    """Macro precision (the non-differentiable metric; argmax inside)."""
+    preds = jnp.argmax(logits, -1)
+    ph = jax.nn.one_hot(preds, n_classes)  # (n, C)
+    lh = jax.nn.one_hot(labels, n_classes)
+    tp = jnp.sum(ph * lh, axis=0)
+    fp = jnp.sum(ph * (1 - lh), axis=0)
+    support = jnp.sum(lh, axis=0) > 0
+    prec = tp / jnp.maximum(tp + fp, 1.0)
+    return jnp.sum(prec * support) / jnp.maximum(jnp.sum(support), 1.0)
+
+
+def metric_value(cp: MetricObjective, x_unit: jax.Array) -> jax.Array:
+    """f_i(x) = 1 - precision_i(theta* + delta(x))  (minimize)."""
+    theta = _perturbed(cp, x_unit)
+    lg = mlp_logits(theta, cp.xs)
+    return 1.0 - soft_precision(lg, cp.ys, 7)
+
+
+def metric_query(cp: MetricObjective, x_unit: jax.Array, key: jax.Array) -> jax.Array:
+    return metric_value(cp, x_unit) + cp.noise_std * jax.random.normal(key, ())
+
+
+def metric_global_value(cps: MetricObjective, x_unit: jax.Array) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda cp: metric_value(cp, x_unit))(cps))
+
+
+# ---------------------------------------------------------------------------
+# 3) LM-backbone objective: FZooS x architecture zoo
+# ---------------------------------------------------------------------------
+
+
+class LMObjective(NamedTuple):
+    """Perturb the final-norm gains of a zoo model; f_i = client-batch loss."""
+
+    batches_tokens: jax.Array  # (N, b, l)
+    batches_labels: jax.Array  # (N, b, l)
+    scale: jax.Array  # (N,)
+    noise_std: jax.Array  # (N,)
+
+
+def make_lm_objective(
+    key: jax.Array,
+    cfg: ModelConfig,
+    n_clients: int,
+    batch: int = 2,
+    seq: int = 32,
+    scale: float = 0.5,
+    noise_std: float = 0.001,
+):
+    toks = jax.random.randint(key, (n_clients, batch, seq + 1), 0, cfg.vocab_size)
+    rep = lambda v: jnp.full((n_clients,), v, jnp.float32)
+    return LMObjective(
+        batches_tokens=toks[..., :-1].astype(jnp.int32),
+        batches_labels=toks[..., 1:].astype(jnp.int32),
+        scale=rep(scale),
+        noise_std=rep(noise_std),
+    )
+
+
+def make_lm_query(cfg: ModelConfig, params: dict, policy: ShardingPolicy | None = None):
+    """Returns (query_fn, global_value_fn, dim).  The ZOO input x (in [0,1]^d,
+    d = d_model) shifts the final-norm gains: gains = 1 + scale*(x - 1/2)."""
+    policy = policy or ShardingPolicy(remat=False)
+
+    def value(cp: LMObjective, x_unit: jax.Array) -> jax.Array:
+        delta = cp.scale * (x_unit - 0.5)
+        p2 = dict(params, final_norm=params["final_norm"] + delta.astype(params["final_norm"].dtype))
+        batch = {"tokens": cp.batches_tokens, "labels": cp.batches_labels}
+        total, _ = lm_loss(p2, cfg, batch, policy)
+        return total / 10.0
+
+    def query(cp, x, key):
+        return value(cp, x) + cp.noise_std * jax.random.normal(key, ())
+
+    def global_value(cps, x):
+        return jnp.mean(jax.vmap(lambda cp: value(cp, x))(cps))
+
+    return query, global_value, cfg.d_model, value

@@ -1,0 +1,174 @@
+"""Federated black-box objectives.
+
+An *objective* is a stacked pytree of per-client parameters (leading axis N)
+plus module-level pure functions:
+
+    query(client_params_i, x, key)  -> noisy scalar y_i(x)   (the only thing
+                                        the optimizer may call -- ZOO contract)
+    value(client_params_i, x)       -> noiseless f_i(x)       (diagnostics)
+    grad(client_params_i, x)        -> exact grad f_i(x)      (diagnostics,
+                                        synthetic objectives only)
+
+All inputs live in the paper's normalized domain X = [0,1]^d (Sec. 2 /
+Appx. E min-max normalization); objectives internally map to their natural
+coordinates.
+
+Synthetic family = paper Appx. E.1 heterogeneous quadratics:
+
+    f_i(x) = 1/(10 d) * ( sum_j [ (1 + C (a_j^i - 1/N)) xr_j^2
+                                 + (1 + C (b_j^i - 1/N)) xr_j ] + 1 ),
+    xr in [-10, 10]^d,  a_j, b_j ~ Dir(1/N * 1) across clients,
+
+so the global average is F(x) = 1/(10d) (sum_j xr_j^2 + xr_j + 1) regardless
+of C, while C controls client heterogeneity (Fig. 1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous quadratics (Appx. E.1)
+# ---------------------------------------------------------------------------
+
+
+class QuadraticClient(NamedTuple):
+    a: jax.Array  # (d,) Dirichlet weights for the quadratic term
+    b: jax.Array  # (d,) Dirichlet weights for the linear term
+    c_het: jax.Array  # () heterogeneity constant C
+    n_clients: jax.Array  # () float N
+    noise_std: jax.Array  # () observation noise sigma
+
+
+def make_quadratic(
+    key: jax.Array,
+    n_clients: int,
+    dim: int,
+    c_het: float,
+    noise_std: float = 0.01,
+) -> QuadraticClient:
+    """Stacked per-client params (leading axis N)."""
+    ka, kb = jax.random.split(key)
+    alpha = jnp.full((n_clients,), 1.0 / n_clients)
+    # Dirichlet across clients, independently per dimension.
+    a = jax.random.dirichlet(ka, alpha, shape=(dim,)).T  # (N, d)
+    b = jax.random.dirichlet(kb, alpha, shape=(dim,)).T  # (N, d)
+    rep = lambda v: jnp.full((n_clients,), v, jnp.float32)
+    return QuadraticClient(
+        a=a.astype(jnp.float32),
+        b=b.astype(jnp.float32),
+        c_het=rep(c_het),
+        n_clients=rep(float(n_clients)),
+        noise_std=rep(noise_std),
+    )
+
+
+def _to_raw(x_unit: jax.Array) -> jax.Array:
+    return 20.0 * x_unit - 10.0  # [0,1] -> [-10,10]
+
+
+def quadratic_value(cp: QuadraticClient, x_unit: jax.Array) -> jax.Array:
+    xr = _to_raw(x_unit)
+    d = xr.shape[-1]
+    wa = 1.0 + cp.c_het * (cp.a - 1.0 / cp.n_clients)
+    wb = 1.0 + cp.c_het * (cp.b - 1.0 / cp.n_clients)
+    return (jnp.sum(wa * xr * xr + wb * xr) + 1.0) / (10.0 * d)
+
+
+def quadratic_grad(cp: QuadraticClient, x_unit: jax.Array) -> jax.Array:
+    """Exact grad wrt the *unit-domain* x (chain rule factor 20)."""
+    xr = _to_raw(x_unit)
+    d = xr.shape[-1]
+    wa = 1.0 + cp.c_het * (cp.a - 1.0 / cp.n_clients)
+    wb = 1.0 + cp.c_het * (cp.b - 1.0 / cp.n_clients)
+    return 20.0 * (2.0 * wa * xr + wb) / (10.0 * d)
+
+
+def quadratic_query(cp: QuadraticClient, x_unit: jax.Array, key: jax.Array) -> jax.Array:
+    return quadratic_value(cp, x_unit) + cp.noise_std * jax.random.normal(key, ())
+
+
+def quadratic_global_value(cps: QuadraticClient, x_unit: jax.Array) -> jax.Array:
+    """F(x) = mean_i f_i(x) over the stacked clients."""
+    return jnp.mean(jax.vmap(lambda cp: quadratic_value(cp, x_unit))(cps))
+
+
+def quadratic_global_grad(cps: QuadraticClient, x_unit: jax.Array) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda cp: quadratic_grad(cp, x_unit))(cps), axis=0)
+
+
+def quadratic_optimum_unit(dim: int) -> jax.Array:
+    """argmin F: xr_j = -1/2  ->  unit coords (xr+10)/20 = 0.475."""
+    return jnp.full((dim,), 0.475, jnp.float32)
+
+
+def quadratic_fstar(dim: int) -> float:
+    """F at the optimum: (d*(-1/4) + 1)/(10 d)."""
+    return float((-0.25 * dim + 1.0) / (10.0 * dim))
+
+
+# ---------------------------------------------------------------------------
+# Non-convex synthetic (robustness coverage beyond the paper's Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+class SinQuadClient(NamedTuple):
+    a: jax.Array  # (d,)
+    phase: jax.Array  # (d,)
+    c_het: jax.Array  # ()
+    n_clients: jax.Array  # ()
+    noise_std: jax.Array  # ()
+
+
+def make_sinquad(key: jax.Array, n_clients: int, dim: int, c_het: float, noise_std: float = 0.01) -> SinQuadClient:
+    ka, kp = jax.random.split(key)
+    alpha = jnp.full((n_clients,), 1.0 / n_clients)
+    a = jax.random.dirichlet(ka, alpha, shape=(dim,)).T
+    phase = jax.random.uniform(kp, (n_clients, dim), maxval=2 * jnp.pi)
+    rep = lambda v: jnp.full((n_clients,), v, jnp.float32)
+    return SinQuadClient(a.astype(jnp.float32), phase, rep(c_het), rep(float(n_clients)), rep(noise_std))
+
+
+def sinquad_value(cp: SinQuadClient, x_unit: jax.Array) -> jax.Array:
+    xr = 4.0 * x_unit - 2.0
+    d = xr.shape[-1]
+    wa = 1.0 + cp.c_het * (cp.a - 1.0 / cp.n_clients)
+    base = jnp.sum(wa * xr * xr) / d
+    ripple = jnp.sum(jnp.sin(3.0 * xr + cp.phase)) * (0.1 * cp.c_het / jnp.maximum(d, 1))
+    return base + ripple
+
+
+def sinquad_grad(cp: SinQuadClient, x_unit: jax.Array) -> jax.Array:
+    return jax.grad(lambda u: sinquad_value(cp, u))(x_unit)
+
+
+def sinquad_query(cp: SinQuadClient, x_unit: jax.Array, key: jax.Array) -> jax.Array:
+    return sinquad_value(cp, x_unit) + cp.noise_std * jax.random.normal(key, ())
+
+
+def sinquad_global_value(cps: SinQuadClient, x_unit: jax.Array) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda cp: sinquad_value(cp, x_unit))(cps))
+
+
+def sinquad_global_grad(cps: SinQuadClient, x_unit: jax.Array) -> jax.Array:
+    return jnp.mean(jax.vmap(lambda cp: sinquad_grad(cp, x_unit))(cps), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity measurement (the paper's G)
+# ---------------------------------------------------------------------------
+
+
+def heterogeneity_g(grad_fn, cps, xs_unit: jax.Array) -> jax.Array:
+    """Empirical  max_x (1/N) sum_i ||grad f_i(x) - grad F(x)||^2  over probe xs."""
+
+    def at_x(x):
+        gs = jax.vmap(lambda cp: grad_fn(cp, x))(cps)  # (N, d)
+        gbar = jnp.mean(gs, axis=0)
+        return jnp.mean(jnp.sum((gs - gbar) ** 2, axis=-1))
+
+    return jnp.max(jax.vmap(at_x)(xs_unit))

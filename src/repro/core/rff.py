@@ -1,0 +1,93 @@
+"""Random Fourier features and the transferable global gradient surrogate
+(paper Sec. 4.2.1 + Appx. B).
+
+phi(x) = sqrt(2/M) cos(V x + b),  V_j ~ N(0, I/l^2),  b_j ~ U[0, 2pi]
+
+so that  k(x, x') ~= phi(x)^T phi(x')  for the SE kernel with lengthscale l.
+The feature bank (V, b) is sampled ONCE before optimization and shared by all
+clients and the server (Appx. B), making the M-dim weight vector
+
+    w = Phi (Khat + s^2 I)^{-1} y,    Phi = [phi(x_tau)]  (M x n)      (eq. 6)
+
+a transferable compression of the whole local surrogate:
+
+    grad_muhat(x) = grad_phi(x)^T w,
+    grad_phi(x)^T w = -sqrt(2/M) * (sin(Vx + b) * w) @ V   in R^d.
+
+The server aggregates  w_r = mean_i w^(i)  (eq. 7) -- an M-float payload per
+client per round, which is the paper's entire extra communication cost.
+
+The contractions here are mirrored by the Pallas TPU kernels in
+``repro.kernels`` (rff_features / rff_grad); these jnp versions are the
+oracles and the CPU execution path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp_surrogate import GPHyper, Trajectory
+
+
+class RFFParams(NamedTuple):
+    v: jax.Array  # (M, d) frequencies
+    b: jax.Array  # (M,) phases
+
+    @property
+    def n_features(self) -> int:
+        return self.v.shape[0]
+
+
+def make_rff(key: jax.Array, n_features: int, dim: int, lengthscale: float) -> RFFParams:
+    """Sample the shared feature bank (done once; see Appx. B)."""
+    kv, kb = jax.random.split(key)
+    v = jax.random.normal(kv, (n_features, dim)) / lengthscale
+    b = jax.random.uniform(kb, (n_features,), minval=0.0, maxval=2.0 * math.pi)
+    return RFFParams(v=v, b=b)
+
+
+def features(params: RFFParams, xs: jax.Array) -> jax.Array:
+    """phi(X): xs (n, d) -> (n, M)."""
+    m = params.n_features
+    proj = xs @ params.v.T + params.b[None, :]
+    return math.sqrt(2.0 / m) * jnp.cos(proj)
+
+
+def grad_features_t_w(params: RFFParams, x: jax.Array, w: jax.Array) -> jax.Array:
+    """grad phi(x)^T w: x (d,), w (M,) -> (d,)."""
+    m = params.n_features
+    s = jnp.sin(x @ params.v.T + params.b)  # (M,)
+    return -math.sqrt(2.0 / m) * ((s * w) @ params.v)
+
+
+def grad_features_t_w_batch(params: RFFParams, xs: jax.Array, w: jax.Array) -> jax.Array:
+    """xs (n, d), w (M,) -> (n, d)."""
+    m = params.n_features
+    s = jnp.sin(xs @ params.v.T + params.b[None, :])  # (n, M)
+    return -math.sqrt(2.0 / m) * ((s * w[None, :]) @ params.v)
+
+
+def fit_w(params: RFFParams, traj: Trajectory, hyper: GPHyper) -> jax.Array:
+    """w = Phi (Khat + s^2 I)^{-1} y  with the same masked-padding scheme as
+    the exact GP (invalid trajectory slots contribute nothing).  -> (M,)
+    """
+    mask = traj.valid_mask()
+    phi = features(params, traj.xs) * mask[:, None]  # (cap, M) rows zeroed when invalid
+    khat = phi @ phi.T  # (cap, cap), already masked
+    # same clamped-eigh pseudo-solve as the exact GP (see gp_surrogate):
+    # the RFF Gram is rank <= M and often near-singular in float32.
+    jitter = jnp.maximum(hyper.noise, 1e-4)
+    gram = khat + jnp.diag(jitter * mask + (1.0 - mask))
+    w, v = jnp.linalg.eigh(gram)
+    w = jnp.maximum(w, jitter)
+    alpha = v @ ((v.T @ (traj.ys * mask)) / w)
+    return phi.T @ alpha
+
+
+def approx_kernel(params: RFFParams, x1: jax.Array, x2: jax.Array) -> jax.Array:
+    """phi(X1) phi(X2)^T -- used by tests for the O(1/sqrt(M)) error law."""
+    return features(params, x1) @ features(params, x2).T

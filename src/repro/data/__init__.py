@@ -1,0 +1,9 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticTextConfig,
+    make_batch_iterator,
+    synthetic_batch,
+)
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    label_subset_partition,
+)

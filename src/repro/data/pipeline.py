@@ -1,0 +1,84 @@
+"""Synthetic token pipeline for the LM-training substrate.
+
+No datasets ship in this container, so the pipeline generates structured
+synthetic streams (Zipf-distributed unigrams mixed with an order-2 Markov
+backbone) -- enough signal that a ~100M model's loss visibly drops within a
+few hundred steps in examples/train_lm.py, while staying fully deterministic
+per seed.  The iterator yields exactly the batch dict that
+``models.input_specs(cfg, 'train_4k')`` promises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTextConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    zipf_a: float = 1.2
+    markov_weight: float = 0.7  # fraction of tokens drawn from the Markov chain
+    n_states: int = 97
+    seed: int = 0
+
+
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks**-a
+    return (p / p.sum()).astype(np.float64)
+
+
+def synthetic_batch(cfg: SyntheticTextConfig, step: int, model_cfg=None) -> dict:
+    """Deterministic batch for `step`.  Adds modality stubs when model_cfg
+    is a vlm/encdec config."""
+    rng = np.random.default_rng(cfg.seed * 1_000_003 + step)
+    b, l, v = cfg.batch_size, cfg.seq_len, cfg.vocab_size
+
+    zipf = _zipf_probs(v, cfg.zipf_a)
+    uni = rng.choice(v, size=(b, l + 1), p=zipf)
+
+    # order-2 Markov backbone: token ~ f(prev two) via hashing, injects
+    # learnable structure
+    state = rng.integers(0, cfg.n_states, size=(b,))
+    markov = np.empty((b, l + 1), dtype=np.int64)
+    prev = rng.integers(0, v, size=(b,))
+    for t in range(l + 1):
+        nxt = (prev * 2654435761 + state * 97 + t) % v
+        markov[:, t] = nxt
+        state = (state + nxt) % cfg.n_states
+        prev = nxt
+    use_markov = rng.random((b, l + 1)) < cfg.markov_weight
+    stream = np.where(use_markov, markov, uni)
+
+    batch = {
+        "tokens": jnp.asarray(stream[:, :-1], jnp.int32),
+        "labels": jnp.asarray(stream[:, 1:], jnp.int32),
+    }
+    if model_cfg is not None:
+        if model_cfg.arch_type == "vlm":
+            key = jax.random.PRNGKey(step)
+            batch["patches"] = 0.02 * jax.random.normal(
+                key, (b, model_cfg.n_patches, model_cfg.d_model), jnp.float32
+            )
+            pos = jnp.broadcast_to(jnp.arange(l)[None, :, None], (b, l, 3))
+            batch["positions"] = pos.astype(jnp.int32)
+        if model_cfg.arch_type == "encdec":
+            key = jax.random.PRNGKey(step)
+            batch["frames"] = 0.02 * jax.random.normal(
+                key, (b, model_cfg.enc_seq, model_cfg.d_model), jnp.float32
+            )
+    return batch
+
+
+def make_batch_iterator(cfg: SyntheticTextConfig, model_cfg=None, start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, step, model_cfg)
+        step += 1

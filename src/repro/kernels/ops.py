@@ -1,0 +1,104 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles block-size padding (zero-pad, slice back) and backend selection:
+on TPU the Pallas kernels run compiled; elsewhere they run in interpret
+mode when ``force_pallas`` (used by tests) or fall back to the jnp oracles
+in ref.py, which are numerically identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.rff_features import rff_features_kernel
+from repro.kernels.rff_grad import rff_grad_kernel
+from repro.kernels.sqexp import sqexp_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_rows(a: jax.Array, target: int) -> jax.Array:
+    pad = target - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+def rff_features(
+    x: jax.Array,
+    v: jax.Array,
+    b: jax.Array,
+    *,
+    block_n: int = 128,
+    block_m: int = 256,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """phi(X): (n,d),(M,d),(M,) -> (n,M)."""
+    if not (_on_tpu() or force_pallas):
+        return ref.rff_features(x, v, b)
+    n, m = x.shape[0], v.shape[0]
+    npad, mpad = _round_up(n, block_n), _round_up(m, block_m)
+    out = rff_features_kernel(
+        _pad_rows(x, npad), _pad_rows(v, mpad), _pad_rows(b, mpad),
+        n_features=m, block_n=block_n, block_m=block_m, interpret=not _on_tpu(),
+    )
+    return out[:n, :m]
+
+
+def rff_grad(
+    x: jax.Array,
+    v: jax.Array,
+    b: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int = 128,
+    block_m: int = 256,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """grad phi(X)^T w: (n,d),(M,d),(M,),(M,) -> (n,d)."""
+    if not (_on_tpu() or force_pallas):
+        return ref.rff_grad(x, v, b, w)
+    n, m = x.shape[0], v.shape[0]
+    npad, mpad = _round_up(n, block_n), _round_up(m, block_m)
+    # Padded feature slots carry v == 0 AND w == 0 => zero contribution.
+    out = rff_grad_kernel(
+        _pad_rows(x, npad), _pad_rows(v, mpad), _pad_rows(b, mpad), _pad_rows(w, mpad),
+        n_features=m, block_n=block_n, block_m=block_m, interpret=not _on_tpu(),
+    )
+    return out[:n, :]
+
+
+def sqexp(
+    x1: jax.Array,
+    x2: jax.Array,
+    lengthscale: float,
+    *,
+    block_n: int = 128,
+    block_m: int = 128,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """SE Gram matrix: (n,d),(m,d) -> (n,m).
+
+    Note: padded rows produce exp(-||x||^2/2l^2) junk values that are sliced
+    away before returning (padding uses zeros, never NaN).
+    """
+    if not (_on_tpu() or force_pallas):
+        return ref.sqexp(x1, x2, lengthscale)
+    n, m = x1.shape[0], x2.shape[0]
+    npad, mpad = _round_up(n, block_n), _round_up(m, block_m)
+    out = sqexp_kernel(
+        _pad_rows(x1, npad), _pad_rows(x2, mpad),
+        lengthscale=lengthscale, block_n=block_n, block_m=block_m,
+        interpret=not _on_tpu(),
+    )
+    return out[:n, :m]

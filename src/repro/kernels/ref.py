@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose against these functions (interpret=True on CPU).
+They are also the CPU execution path used by ops.py when no TPU is present.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def rff_features(x: jax.Array, v: jax.Array, b: jax.Array, n_features: int | None = None) -> jax.Array:
+    """phi(X) = sqrt(2/M) cos(X V^T + b).   x (n,d), v (M,d), b (M,) -> (n,M)."""
+    m = n_features if n_features is not None else v.shape[0]
+    proj = x @ v.T + b[None, :]
+    return (math.sqrt(2.0 / m) * jnp.cos(proj)).astype(x.dtype)
+
+
+def rff_grad(x: jax.Array, v: jax.Array, b: jax.Array, w: jax.Array, n_features: int | None = None) -> jax.Array:
+    """grad phi(X)^T w = -sqrt(2/M) (sin(X V^T + b) * w) V.
+
+    x (n,d), v (M,d), b (M,), w (M,) -> (n,d).
+    """
+    m = n_features if n_features is not None else v.shape[0]
+    s = jnp.sin(x @ v.T + b[None, :])  # (n, M)
+    return (-math.sqrt(2.0 / m) * ((s * w[None, :]) @ v)).astype(x.dtype)
+
+
+def sqexp(x1: jax.Array, x2: jax.Array, lengthscale: float) -> jax.Array:
+    """K(X1, X2) = exp(-||x1-x2||^2 / (2 l^2)).  (n,d),(m,d) -> (n,m)."""
+    n1 = jnp.sum(x1 * x1, axis=-1)
+    n2 = jnp.sum(x2 * x2, axis=-1)
+    d2 = jnp.maximum(n1[:, None] + n2[None, :] - 2.0 * (x1 @ x2.T), 0.0)
+    return jnp.exp(-0.5 * d2 / (lengthscale**2)).astype(x1.dtype)

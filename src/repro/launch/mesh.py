@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init -- the dry-run must
+set XLA_FLAGS before any jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target: TPU v5e, 256 chips/pod.
+
+    single-pod: (data=16, model=16); multi-pod: (pod=2, data=16, model=16).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (CPU smoke / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# v5e hardware constants for the roofline (see system spec).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1-5-0-5b \
+        --variant smoke --batch-size 4 --prompt-len 32 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import decode_step, init_train_state, prefill
+from repro.sharding.rules import ShardingPolicy, mesh_context
+
+
+def generate(cfg, params, batch, policy, gen_len: int, cache_len: int, temperature: float, key):
+    """Greedy/temperature sampling loop over decode_step."""
+    logits, cache = jax.jit(lambda p, b: prefill(p, cfg, b, policy, cache_len=cache_len))(
+        params, batch
+    )
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, policy))
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(gen_len):
+        toks.append(tok)
+        logits, cache = step(params, cache, tok)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(toks, axis=1), cache
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b",
+                    choices=[a.replace("_", "-") for a in ARCH_IDS] + list(ARCH_IDS))
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch.replace("-", "_"), args.variant)
+    policy = ShardingPolicy(remat=False)
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = init_train_state(key, cfg)
+
+    batch = {"tokens": jax.random.randint(key, (args.batch_size, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.arch_type == "vlm":
+        batch["patches"] = 0.02 * jax.random.normal(
+            key, (args.batch_size, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(args.prompt_len)[None, :, None], (args.batch_size, args.prompt_len, 3)
+        ).astype(jnp.int32)
+    if cfg.arch_type == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (args.batch_size, cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+
+    with mesh_context(mesh):
+        t0 = time.time()
+        out, cache = generate(
+            cfg, params, batch, policy, args.gen_len,
+            args.prompt_len + args.gen_len + 1, args.temperature, key,
+        )
+        dt = time.time() - t0
+    n_tok = out.shape[0] * out.shape[1]
+    print(f"generated {tuple(out.shape)} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Input/output sharding builders for the dry-run and the real launchers.
+
+Placement policy (DESIGN.md Sec. 5):
+  * batch dims over ("pod","data") (pod axis only when present),
+  * params per the logical axes declared in models/params.py,
+  * optimizer moments additionally ZeRO-1-sharded over 'data',
+  * decode KV caches: batch over data + sequence over 'model'; the
+    batch=1 long_500k shape instead shards the cache SEQUENCE over
+    (pod, data, model) so all 256/512 chips hold a slice.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import AttnCache, DecodeCache, SsmStack, init_cache
+from repro.models.params import param_defs
+from repro.optim.optimizers import AdamState, OptState
+from repro.sharding.rules import ShardingPolicy, spec_with_fallback, zero1_extend
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(
+    cfg: ModelConfig, mesh: Mesh, policy: ShardingPolicy | None = None
+) -> dict[str, NamedSharding]:
+    """Param placement.  With policy.fsdp the tensor-parallel spec from the
+    logical axes is EXTENDED with a 'data' shard on the largest replicated
+    divisible dim (ZeRO-3 / FSDP): a ~800B-param arch is otherwise 100 GB
+    per device on a 16-wide model axis (measured, EXPERIMENTS.md §Perf it.1).
+    GSPMD inserts the per-layer weight all-gathers this implies."""
+    fsdp = policy.fsdp if policy is not None else True
+    out = {}
+    for n, pd in param_defs(cfg).items():
+        spec = spec_with_fallback(mesh, pd.shape, pd.axes)
+        if fsdp:
+            spec = zero1_extend(mesh, pd.shape, spec, data_axes(mesh))
+        out[n] = ns(mesh, spec)
+    return out
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, policy: ShardingPolicy) -> OptState:
+    """AdamW moments: follow the (FSDP-extended) param spec; with fsdp off,
+    ZeRO-1 still extends the moments alone over 'data'."""
+    moments = {}
+    for n, pd in param_defs(cfg).items():
+        spec = spec_with_fallback(mesh, pd.shape, pd.axes)
+        if policy.fsdp or policy.zero1:
+            spec = zero1_extend(mesh, pd.shape, spec, data_axes(mesh))
+        moments[n] = ns(mesh, spec)
+    scalar = ns(mesh, P())
+    return OptState(inner=AdamState(mu=moments, nu=dict(moments), step=scalar))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, shape_name: str) -> dict[str, NamedSharding]:
+    """Shardings for the train/prefill batch dict."""
+    from repro.models.model import INPUT_SHAPES, input_specs
+
+    b_ax = data_axes(mesh)
+    specs = input_specs(cfg, shape_name)
+    out = {}
+    for k, v in specs.items():
+        if k in ("token", "cache"):
+            continue
+        out[k] = ns(mesh, spec_with_fallback(mesh, v.shape, (b_ax,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_shardings(
+    cfg: ModelConfig, mesh: Mesh, shape_name: str
+) -> DecodeCache:
+    """DecodeCache of NamedShardings for the decode shapes."""
+    from repro.models.model import INPUT_SHAPES
+
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    b_ax = data_axes(mesh)
+    n_dev_data = 1
+    for a in b_ax:
+        n_dev_data *= mesh.shape[a]
+
+    if b % n_dev_data == 0:
+        batch_ax: Any = b_ax
+        seq_ax: Any = "model"
+    else:
+        # long_500k (batch=1): replicate batch, stripe the cache sequence
+        # across EVERY mesh axis so each chip holds S / n_chips entries.
+        batch_ax = None
+        seq_ax = b_ax + ("model",)
+
+    cache_struct = jax.eval_shape(lambda: init_cache(cfg, b, s))
+
+    def attn_spec(arr, seq_dim_is_enc=False):
+        if arr.ndim != 5:  # empty placeholder
+            return ns(mesh, P())
+        # (nb, B, S, KV, hd)
+        s_ax = None if seq_dim_is_enc else seq_ax
+        return ns(mesh, spec_with_fallback(mesh, arr.shape, (None, batch_ax, s_ax, None, None)))
+
+    def ssm_state_spec(arr):
+        if arr.ndim == 5:  # (nb, B, H, P, N)
+            axes = (None, batch_ax, "model", None, None)
+        elif arr.ndim == 6:  # hybrid (nb, n_ssm, B, H, P, N)
+            axes = (None, None, batch_ax, "model", None, None)
+        else:
+            return ns(mesh, P())
+        return ns(mesh, spec_with_fallback(mesh, arr.shape, axes))
+
+    def ssm_conv_spec(arr):
+        if arr.ndim == 4:  # (nb, B, K-1, C)
+            axes = (None, batch_ax, None, "model")
+        elif arr.ndim == 5:  # hybrid
+            axes = (None, None, batch_ax, None, "model")
+        else:
+            return ns(mesh, P())
+        return ns(mesh, spec_with_fallback(mesh, arr.shape, axes))
+
+    return DecodeCache(
+        attn=AttnCache(k=attn_spec(cache_struct.attn.k), v=attn_spec(cache_struct.attn.v)),
+        ssm=SsmStack(
+            conv=ssm_conv_spec(cache_struct.ssm.conv), state=ssm_state_spec(cache_struct.ssm.state)
+        ),
+        cross=AttnCache(
+            k=attn_spec(cache_struct.cross.k, seq_dim_is_enc=True),
+            v=attn_spec(cache_struct.cross.v, seq_dim_is_enc=True),
+        ),
+        pos=ns(mesh, P()),
+    )
+
+
+def token_sharding(cfg: ModelConfig, mesh: Mesh, shape_name: str) -> NamedSharding:
+    from repro.models.model import INPUT_SHAPES
+
+    b = INPUT_SHAPES[shape_name]["global_batch"]
+    return ns(mesh, spec_with_fallback(mesh, (b, 1), (data_axes(mesh), None)))

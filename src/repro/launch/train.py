@@ -1,0 +1,83 @@
+"""LM training driver (first-order substrate).
+
+Runs on whatever devices exist (CPU smoke -> real mesh): builds the mesh,
+places params per the sharding rules, streams the synthetic pipeline and
+checkpoints periodically.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1-5-0-5b \
+        --variant smoke --steps 50 --batch-size 8 --seq-len 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_train_state, save_train_state
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import SyntheticTextConfig, synthetic_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import train_step
+from repro.models.model import init_train_state
+from repro.optim import warmup_cosine_schedule
+from repro.sharding.rules import ShardingPolicy, mesh_context
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b",
+                    choices=[a.replace("_", "-") for a in ARCH_IDS] + list(ARCH_IDS))
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch.replace("-", "_"), args.variant)
+    policy = ShardingPolicy(remat=args.variant == "full")
+    mesh = make_host_mesh()
+    sched = warmup_cosine_schedule(args.lr, args.warmup, args.steps)
+
+    params, opt = init_train_state(jax.random.PRNGKey(args.seed), cfg)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        params, opt, start = restore_train_state(args.ckpt_dir, params, opt)
+        print(f"restored step {start} from {args.ckpt_dir}")
+
+    dcfg = SyntheticTextConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len, batch_size=args.batch_size,
+        seed=args.seed,
+    )
+    step_fn = jax.jit(lambda p, o, b, lr: train_step(p, o, cfg, b, policy, lr))
+
+    with mesh_context(mesh):
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = synthetic_batch(dcfg, step, cfg)
+            params, opt, metrics = step_fn(params, opt, batch, sched(step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                dt = time.time() - t0
+                print(f"step {step:5d}  loss {loss:.4f}  grad_norm {gn:.2f}  "
+                      f"({dt:.1f}s elapsed)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_train_state(args.ckpt_dir, step + 1, params, opt,
+                                 {"loss": float(metrics["loss"])})
+        if args.ckpt_dir:
+            save_train_state(args.ckpt_dir, args.steps, params, opt,
+                             {"loss": float(metrics["loss"])})
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    INPUT_SHAPES,
+    DecodeCache,
+    decode_step,
+    forward,
+    init_cache,
+    init_train_state,
+    input_specs,
+    lm_loss,
+    prefill,
+    train_step,
+)
+from repro.models.params import (  # noqa: F401
+    count_params,
+    init_params,
+    param_defs,
+    param_pspecs,
+    param_shapes,
+)

@@ -1,0 +1,404 @@
+"""Transformer layer primitives: RMSNorm, RoPE / M-RoPE, GQA attention
+(training, prefill and cached decode), gated MLPs and the MoE layer.
+
+Conventions
+-----------
+* activations default to the config dtype (bf16); norms, softmax and router
+  math run in float32.
+* attention params are stored flat ``(d, H*hd)`` so the tensor-parallel shard
+  axis is always divisible (DESIGN.md Sec. 5); heads are reshaped inside.
+* ``window > 0`` applies a local (sliding/chunked) attention mask -- the
+  sub-quadratic mode used by llama4-style chunked attention and jamba's
+  attention layers in long-context serving.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.rules import constrain
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., head_dim//2)."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def _mrope_angles(
+    positions3: jax.Array, head_dim: int, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: positions3 (..., 3) t/h/w -> angles (..., half).
+
+    The half-dim frequency slots are split into `sections` (t, h, w); each
+    slot rotates by the position component of its section [arXiv:2409.12191].
+    """
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_ids = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )
+    assert sec_ids.shape[0] == half, (sections, half)
+    pos_per_slot = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (..., half)
+    return pos_per_slot * inv_freq
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    mode: str = "standard",
+    sections: tuple[int, ...] = (16, 24, 24),
+) -> jax.Array:
+    """x (B, L, H, hd); positions (B, L) or (B, L, 3) for mrope."""
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    if mode == "mrope":
+        ang = _mrope_angles(positions, hd, theta, sections)  # (B, L, half)
+    else:
+        ang = _rope_angles(positions, hd, theta)  # (B, L, half)
+    cos = jnp.cos(ang)[..., None, :]  # (B, L, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, l, _ = x.shape
+    return x.reshape(b, l, n_heads, -1)
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by group replication."""
+    kv = k.shape[2]
+    rep = n_heads // kv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _attn_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool,
+    window: int,
+    q_offset: jax.Array | int = 0,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Boolean (q_len, kv_len) (or broadcastable) attention mask."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    ki = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    return mask
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, L, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int,
+    chunk: int,
+) -> jax.Array:
+    """Query-chunked attention: scan over L/chunk query blocks so the f32
+    score matrix is only (B, H, chunk, S) at a time.  At 32k x 32k this cuts
+    the attention temp from O(L*S) to O(chunk*S) -- measured 120-320 GB ->
+    a few GB on the prefill_32k shapes (EXPERIMENTS.md §Perf it.2).
+    Semantics identical to attention_core with a causal/window mask.
+    """
+    b, l, h, hd = q.shape
+    s = k.shape[1]
+    assert l % chunk == 0, (l, chunk)
+    kr = _repeat_kv(k, h)
+    vr = _repeat_kv(v, h)
+    qc = q.reshape(b, l // chunk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    ki = jnp.arange(s)
+
+    def body(_, inputs):
+        qb, off = inputs  # (B, chunk, H, hd), ()
+        scores = jnp.einsum("blhd,bshd->bhls", qb, kr, preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(hd))
+        qi = jnp.arange(chunk)[:, None] + off
+        m = jnp.ones((chunk, s), bool)
+        if causal:
+            m &= ki[None, :] <= qi
+        if window > 0:
+            m &= ki[None, :] > qi - window
+        scores = jnp.where(m, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhls,bshd->blhd", probs.astype(qb.dtype), vr)
+        return None, out
+
+    offs = jnp.arange(l // chunk) * chunk
+    _, outs = jax.lax.scan(body, None, (qc, offs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, l, h, hd)
+
+
+def attention_core(
+    q: jax.Array,  # (B, Lq, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    mask: jax.Array,  # broadcastable to (B, H, Lq, S)
+    softcap: float = 0.0,
+) -> jax.Array:
+    h = q.shape[2]
+    hd = q.shape[3]
+    kr = _repeat_kv(k, h)
+    vr = _repeat_kv(v, h)
+    scores = jnp.einsum("blhd,bshd->bhls", q, kr, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhls,bshd->blhd", probs.astype(q.dtype), vr)
+    return out
+
+
+class AttnParams(NamedTuple):
+    ln: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+
+
+def pick_attn(p: dict, prefix: str) -> AttnParams:
+    return AttnParams(
+        ln=p[f"{prefix}ln"],
+        wq=p[f"{prefix}wq"],
+        wk=p[f"{prefix}wk"],
+        wv=p[f"{prefix}wv"],
+        wo=p[f"{prefix}wo"],
+        bq=p.get(f"{prefix}bq"),
+        bk=p.get(f"{prefix}bk"),
+        bv=p.get(f"{prefix}bv"),
+    )
+
+
+def _project_qkv(ap: AttnParams, x: jax.Array, cfg: ModelConfig, tp_constrain: bool = True):
+    xn = rmsnorm(x, ap.ln, cfg.norm_eps)
+    q = xn @ ap.wq
+    k = xn @ ap.wk
+    v = xn @ ap.wv
+    if ap.bq is not None:
+        q = q + ap.bq
+        k = k + ap.bk
+        v = v + ap.bv
+    if tp_constrain:
+        # tensor-parallel heads: right for full-sequence compute.  Decode
+        # passes tp_constrain=False: head-sharding a 1-token q forces GSPMD
+        # to all-gather the sequence-sharded KV cache every layer (measured
+        # ~200 GB/token on scout decode_32k -- EXPERIMENTS.md §Perf it.4b);
+        # leaving q unconstrained keeps attention sequence-parallel with
+        # psum-combined softmax partials instead.
+        q = constrain(q, None, None, "model")
+        k = constrain(k, None, None, "model")
+        v = constrain(v, None, None, "model")
+    return (
+        _split_heads(q, cfg.n_heads),
+        _split_heads(k, cfg.n_kv_heads),
+        _split_heads(v, cfg.n_kv_heads),
+    )
+
+
+def attn_block(
+    ap: AttnParams,
+    x: jax.Array,  # (B, L, d) residual stream
+    cfg: ModelConfig,
+    positions: jax.Array,  # (B, L) or (B, L, 3)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
+    chunk: int = 0,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder).  Returns the
+    residual delta (caller adds).  ``chunk > 0`` enables query-chunked
+    attention when the sequence is long enough to benefit."""
+    q, k, v = _project_qkv(ap, x, cfg)
+    if cross_kv is not None:
+        k, v = cross_kv  # encoder-side keys/values (already headed)
+        mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+        out = attention_core(q, k, v, mask)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
+        if chunk > 0 and q.shape[1] % chunk == 0 and q.shape[1] >= 2 * chunk:
+            out = attention_chunked(q, k, v, causal=causal, window=window, chunk=chunk)
+        else:
+            mask = _attn_mask(q.shape[1], k.shape[1], causal=causal, window=window)
+            out = attention_core(q, k, v, mask)
+    out = out.reshape(out.shape[0], out.shape[1], -1)
+    return constrain(out @ ap.wo, None, None, None)
+
+
+def attn_decode(
+    ap: AttnParams,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,  # () int32 current position
+    *,
+    window: int = 0,
+    cross: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token cached attention.  Returns (delta, k_cache, v_cache)."""
+    q, k, v = _project_qkv(ap, x, cfg, tp_constrain=False)
+    if cross:
+        # cross-attention: cache holds encoder K/V; nothing to update
+        mask = jnp.ones((1, k_cache.shape[1]), bool)
+    else:
+        posb = jnp.broadcast_to(pos[None], (x.shape[0], 1))
+        if cfg.rope_mode == "mrope":
+            posb = jnp.broadcast_to(pos[None, None], (x.shape[0], 1, 3))
+        q = apply_rope(q, posb, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
+        k = apply_rope(k, posb, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        s = k_cache.shape[1]
+        ki = jnp.arange(s)
+        mask = (ki <= pos)
+        if window > 0:
+            mask &= ki > pos - window
+        mask = mask[None, :]
+    out = attention_core(q, k_cache, v_cache, mask)
+    out = out.reshape(out.shape[0], 1, -1)
+    return out @ ap.wo, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_block(p: dict, prefix: str, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Gated MLP (swiglu / geglu).  Returns residual delta."""
+    xn = rmsnorm(x, p[f"{prefix}ln"], cfg.norm_eps)
+    gate = constrain(xn @ p[f"{prefix}w_gate"], None, None, "model")
+    up = constrain(xn @ p[f"{prefix}w_up"], None, None, "model")
+    h = _act(cfg.mlp_act, gate) * up
+    return constrain(h @ p[f"{prefix}w_down"], None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (expert-parallel, capacity-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_block(
+    p: dict, prefix: str, x: jax.Array, cfg: ModelConfig, *, return_aux: bool = False
+):
+    """Top-k MoE with per-expert capacity and scatter dispatch.
+
+    Compute cost is O(T * top_k * capacity_factor) expert-MLP FLOPs (NOT
+    O(T * E)): tokens are scattered into an (E, C, d) buffer sharded
+    expert-parallel over 'model', batched expert GEMMs run, results gather
+    back.  GSPMD turns the scatter/gather into the all-to-all pattern of
+    expert parallelism.  Overflowing tokens beyond capacity are dropped
+    (Switch-style); the shared experts (llama4) run densely.
+    """
+    b, l, d = x.shape
+    xn = rmsnorm(x, p[f"{prefix}ln"], cfg.norm_eps)
+    t = b * l
+    k = cfg.moe_top_k
+    e = cfg.n_experts
+    xt = xn.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p[f"{prefix}router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # flatten the k slots
+    slot_expert = expert_idx.reshape(-1)  # (T*k,)
+    slot_gate = gate_vals.reshape(-1)
+    slot_src = jnp.repeat(jnp.arange(t), k)
+
+    capacity = int(max(cfg.moe_capacity_factor * t * k / e, 4))
+    capacity = min(capacity + (-capacity) % 4, t * k)
+
+    onehot = jax.nn.one_hot(slot_expert, e, dtype=jnp.int32)  # (T*k, E)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(t * k), slot_expert]  # (T*k,)
+    keep = rank < capacity
+    rank_c = jnp.where(keep, rank, 0)
+
+    # dispatch: (E, C, d)
+    buf = jnp.zeros((e, capacity, d), xt.dtype)
+    contrib = jnp.where(keep[:, None], xt[slot_src], 0)
+    buf = buf.at[slot_expert, rank_c].add(contrib)
+    buf = constrain(buf, "model", None, None)
+
+    # batched expert GEMMs (E sharded over 'model' -> expert parallelism)
+    g = _act(cfg.mlp_act, jnp.einsum("ecd,edf->ecf", buf, p[f"{prefix}we_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p[f"{prefix}we_up"])
+    h = constrain(g * u, "model", None, None)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p[f"{prefix}we_down"])  # (E, C, d)
+
+    # combine
+    y_slots = out_e[slot_expert, rank_c] * jnp.where(keep, slot_gate, 0.0)[:, None].astype(xt.dtype)
+    y = jnp.zeros((t, d), xt.dtype).at[slot_src].add(y_slots)
+
+    # shared (dense) experts -- llama4-style
+    if cfg.n_shared_experts:
+        sg = _act(cfg.mlp_act, xt @ p[f"{prefix}ws_gate"])
+        su = xt @ p[f"{prefix}ws_up"]
+        y = y + (sg * su) @ p[f"{prefix}ws_down"]
+
+    y = y.reshape(b, l, d)
+    if not return_aux:
+        return y
+    # Switch-style load-balance auxiliary loss.
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,608 @@
+"""Model assembly for every architecture family.
+
+All stacks scan over homogeneous blocks (hybrids scan super-blocks of
+``attn_every`` layers) so HLO size is depth-independent.  Three entry points
+per architecture, matching the dry-run input shapes:
+
+  train_step   -- full-sequence causal LM loss + AdamW update    (train_4k)
+  prefill      -- full-sequence forward that fills the decode cache (prefill_32k)
+  decode_step  -- ONE new token against a seq_len cache           (decode_32k,
+                  long_500k for sub-quadratic archs)
+
+Modality carve-outs (see DESIGN.md): whisper's mel+conv frontend and
+qwen2-vl's ViT are stubs -- ``input_specs`` hands the backbone precomputed
+frame/patch embeddings of the right shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.sharding.rules import ShardingPolicy, batch_axes, constrain
+
+Params = dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (nb, B, S, KV, hd)
+    v: jax.Array
+
+
+class SsmStack(NamedTuple):
+    conv: jax.Array  # (nb, [n_ssm,] B, K-1, C)
+    state: jax.Array  # (nb, [n_ssm,] B, H, P, N)
+
+
+class DecodeCache(NamedTuple):
+    """Union cache; unused members are size-0 arrays to stay a pytree."""
+
+    attn: AttnCache
+    ssm: SsmStack
+    cross: AttnCache  # encdec only: encoder K/V per decoder layer
+    pos: jax.Array  # () int32 next write position
+
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> DecodeCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    nb = cfg.n_blocks
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    e0 = lambda: AttnCache(_zeros((0,), dtype), _zeros((0,), dtype))
+    s0 = lambda: SsmStack(_zeros((0,), dtype), _zeros((0,), jnp.float32))
+
+    if cfg.arch_type == "ssm":
+        attn = e0()
+        ssmc = SsmStack(
+            conv=_zeros((nb, batch, cfg.ssm_conv - 1, cfg.ssm_conv_channels), dtype),
+            state=_zeros((nb, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        )
+        cross = e0()
+    elif cfg.arch_type == "hybrid":
+        n_ssm = cfg.attn_every - 1
+        attn = AttnCache(
+            k=_zeros((nb, batch, seq, kv, hd), dtype), v=_zeros((nb, batch, seq, kv, hd), dtype)
+        )
+        ssmc = SsmStack(
+            conv=_zeros((nb, n_ssm, batch, cfg.ssm_conv - 1, cfg.ssm_conv_channels), dtype),
+            state=_zeros(
+                (nb, n_ssm, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            ),
+        )
+        cross = e0()
+    elif cfg.arch_type == "encdec":
+        attn = AttnCache(
+            k=_zeros((nb, batch, seq, kv, hd), dtype), v=_zeros((nb, batch, seq, kv, hd), dtype)
+        )
+        ssmc = s0()
+        cross = AttnCache(
+            k=_zeros((nb, batch, cfg.enc_seq, kv, hd), dtype),
+            v=_zeros((nb, batch, cfg.enc_seq, kv, hd), dtype),
+        )
+    else:
+        attn = AttnCache(
+            k=_zeros((nb, batch, seq, kv, hd), dtype), v=_zeros((nb, batch, seq, kv, hd), dtype)
+        )
+        ssmc = s0()
+        cross = e0()
+    return DecodeCache(attn=attn, ssm=ssmc, cross=cross, pos=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# block bodies (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _block_params(p: Params, prefix: str = "blocks/") -> Params:
+    return {k[len(prefix) :]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def _mlp_or_moe(bp: Params, prefix: str, x: jax.Array, cfg: ModelConfig):
+    if cfg.is_moe_mlp:
+        return L.moe_block(bp, prefix, x, cfg, return_aux=True)
+    return L.mlp_block(bp, prefix, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _residual(x: jax.Array, policy: ShardingPolicy) -> jax.Array:
+    ba = batch_axes(policy)
+    seq_ax = "model" if policy.seq_parallel else None
+    return constrain(x, ba, seq_ax, None)
+
+
+def _scan(policy: ShardingPolicy, body, init, xs):
+    """lax.scan over blocks; fully unrolled when policy.scan_unroll (the
+    dry-run uses this so cost_analysis counts every layer, not the while-loop
+    body once)."""
+    return jax.lax.scan(body, init, xs, unroll=True if policy.scan_unroll else 1)
+
+
+def _full_block(
+    bp: Params, x: jax.Array, cfg: ModelConfig, positions, policy: ShardingPolicy, window: int
+):
+    """One scanned block, full-sequence mode.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block_kind == "ssm":
+        x = x + S.ssm_block_train(S.pick_ssm(bp, ""), x, cfg)
+        return _residual(x, policy), aux
+    if cfg.block_kind == "hybrid":
+        # 1 attention layer ...
+        x = x + L.attn_block(L.pick_attn(bp, "attn."), x, cfg, positions, window=window, chunk=policy.attn_chunk)
+        d, a = _mlp_or_moe(_index_sub(bp, "mlp.", 0), "mlp.", x, cfg)
+        x = _residual(x + d, policy)
+        aux += a
+        # ... then attn_every-1 mamba layers, each with its MLP.
+        for i in range(cfg.attn_every - 1):
+            x = x + S.ssm_block_train(S.pick_ssm(_index_sub(bp, "ssm.", i), "ssm."), x, cfg)
+            d, a = _mlp_or_moe(_index_sub(bp, "mlp.", i + 1), "mlp.", x, cfg)
+            x = _residual(x + d, policy)
+            aux += a
+        return x, aux
+    # plain attention block (dense / moe / vlm / encoder-decoder handled apart)
+    x = x + L.attn_block(L.pick_attn(bp, "attn."), x, cfg, positions, window=window, chunk=policy.attn_chunk)
+    d, a = _mlp_or_moe(bp, "mlp.", x, cfg)
+    return _residual(x + d, policy), aux + a
+
+
+def _index_sub(bp: Params, prefix: str, i: int) -> Params:
+    """Select the i-th inner layer of a super-block parameter group."""
+    return {k: (v[i] if k.startswith(prefix) else v) for k, v in bp.items() if k.startswith(prefix)}
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def _positions_for(cfg: ModelConfig, batch: dict, bsz: int, length: int) -> jax.Array:
+    if cfg.rope_mode == "mrope":
+        if "positions" in batch:
+            return batch["positions"]  # (B, L, 3)
+        base = jnp.arange(length)[None, :, None]
+        return jnp.broadcast_to(base, (bsz, length, 3))
+    return jnp.broadcast_to(jnp.arange(length)[None, :], (bsz, length))
+
+
+def _embed(p: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def _merge_patches(x: jax.Array, batch: dict) -> jax.Array:
+    """VLM: overwrite the first n_patches positions with the (stub) patch
+    embeddings -- the projector output of the vision tower."""
+    patches = batch.get("patches")
+    if patches is None:
+        return x
+    return jax.lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+
+
+def _unembed(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, None, None, "model")
+
+
+def _encode(p: Params, cfg: ModelConfig, frames: jax.Array, policy: ShardingPolicy) -> jax.Array:
+    """Whisper-style encoder over (stub) frame embeddings (B, enc_seq, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + p["enc_pos"][None, : frames.shape[1], :].astype(
+        jnp.dtype(cfg.dtype)
+    )
+    bp_all = _block_params(p, "enc_blocks/")
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+
+    def body(carry, bp):
+        x = carry
+        x = x + L.attn_block(L.pick_attn(bp, "attn."), x, cfg, pos, causal=False)
+        x = x + L.mlp_block(bp, "mlp.", x, cfg)
+        return _residual(x, policy), None
+
+    if policy.remat:
+        body = jax.checkpoint(body)
+    x, _ = _scan(policy, body, x, bp_all)
+    return L.rmsnorm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    policy: ShardingPolicy,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B, L, V), moe_aux)."""
+    tokens = batch["tokens"]
+    bsz, length = tokens.shape
+    x = _embed(p, cfg, tokens)
+    if cfg.arch_type == "vlm":
+        x = _merge_patches(x, batch)
+    positions = _positions_for(cfg, batch, bsz, length)
+    x = _residual(x, policy)
+
+    if cfg.arch_type == "encdec":
+        enc_out = _encode(p, cfg, batch["frames"], policy)
+        x = x + p["dec_pos"][None, :length, :].astype(x.dtype)
+        bp_all = _block_params(p)
+
+        def body(carry, bp):
+            x = carry
+            x = x + L.attn_block(L.pick_attn(bp, "self."), x, cfg, positions, causal=True, chunk=policy.attn_chunk)
+            ca = L.pick_attn(bp, "cross.")
+            # enc_out is already enc_norm'd by _encode; cross K/V project it raw
+            # (kept identical to the prefill path -- decode-vs-forward tested).
+            ck = (enc_out @ ca.wk).reshape(bsz, -1, cfg.n_kv_heads, cfg.resolved_head_dim)
+            cv = (enc_out @ ca.wv).reshape(bsz, -1, cfg.n_kv_heads, cfg.resolved_head_dim)
+            x = x + L.attn_block(ca, x, cfg, positions, cross_kv=(ck, cv))
+            x = x + L.mlp_block(bp, "mlp.", x, cfg)
+            return _residual(x, policy), jnp.zeros((), jnp.float32)
+
+        if policy.remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan(policy, body, x, bp_all)
+        return _unembed(p, cfg, x), jnp.sum(auxs)
+
+    bp_all = _block_params(p)
+    window = cfg.sliding_window
+
+    def body(carry, bp):
+        x = carry
+        x, aux = _full_block(bp, x, cfg, positions, policy, window)
+        return x, aux
+
+    if policy.remat:
+        body = jax.checkpoint(body)
+    x, auxs = _scan(policy, body, x, bp_all)
+    return _unembed(p, cfg, x), jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    p: Params, cfg: ModelConfig, batch: dict, policy: ShardingPolicy
+) -> tuple[jax.Array, dict]:
+    logits, aux = forward(p, cfg, batch, policy)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    # Select the label logit with a fused masked reduce rather than
+    # take_along_axis: a gather along the vocab-sharded axis would force
+    # GSPMD to all-gather the full f32 logits (measured 40 GB/device on
+    # qwen1.5 train_4k); the iota==label select fuses into the reduction.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == labels_c[..., None], lf, 0.0), axis=-1)
+    nll = (lse - picked) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / n
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "moe_aux": aux, "tokens": n}
+
+
+def train_step(
+    p: Params,
+    opt_state,
+    cfg: ModelConfig,
+    batch: dict,
+    policy: ShardingPolicy,
+    lr: float | jax.Array = 1e-4,
+):
+    (total, metrics), grads = jax.value_and_grad(
+        lambda pp: lm_loss(pp, cfg, batch, policy), has_aux=True
+    )(p)
+    new_p, new_opt = adamw_update(opt_state, grads, p, lr)
+    metrics = dict(metrics, total=total, grad_norm=_global_norm(grads))
+    return new_p, new_opt, metrics
+
+
+def _global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig):
+    from repro.models.params import init_params
+
+    p = init_params(key, cfg)
+    return p, adamw_init(p)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    p: Params, cfg: ModelConfig, batch: dict, policy: ShardingPolicy, cache_len: int = 0
+) -> tuple[jax.Array, DecodeCache]:
+    """Full-sequence forward that also fills the decode cache.
+
+    Returns (last-token logits (B, V), cache with pos = L).
+    """
+    tokens = batch["tokens"]
+    bsz, length = tokens.shape
+    cache_len = cache_len or length
+    cache = init_cache(cfg, bsz, cache_len)
+    x = _embed(p, cfg, tokens)
+    if cfg.arch_type == "vlm":
+        x = _merge_patches(x, batch)
+    positions = _positions_for(cfg, batch, bsz, length)
+    x = _residual(x, policy)
+    window = cfg.sliding_window
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def project_kv(ap: L.AttnParams, xin: jax.Array, rope: bool = True):
+        _, k, v = L._project_qkv(ap, xin, cfg)
+        if rope:
+            k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode, cfg.mrope_sections)
+        return k, v
+
+    def pad_cache(k: jax.Array) -> jax.Array:
+        if cache_len == length:
+            return k
+        pad = cache_len - length
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if cfg.arch_type == "encdec":
+        enc_out = _encode(p, cfg, batch["frames"], policy)
+        x = x + p["dec_pos"][None, :length, :].astype(x.dtype)
+        bp_all = _block_params(p)
+
+        def body(carry, bp):
+            x = carry
+            sa = L.pick_attn(bp, "self.")
+            sk, sv = project_kv(sa, x, rope=cfg.rope_mode != "none")
+            x = x + L.attn_block(sa, x, cfg, positions, causal=True, chunk=policy.attn_chunk)
+            ca = L.pick_attn(bp, "cross.")
+            ck = (enc_out @ ca.wk).reshape(bsz, -1, kv, hd)
+            cv = (enc_out @ ca.wv).reshape(bsz, -1, kv, hd)
+            x = x + L.attn_block(ca, x, cfg, positions, cross_kv=(ck, cv))
+            x = x + L.mlp_block(bp, "mlp.", x, cfg)
+            return _residual(x, policy), (pad_cache(sk), pad_cache(sv), ck, cv)
+
+        x, (ks, vs, cks, cvs) = _scan(policy, body, x, bp_all)
+        cache = cache._replace(
+            attn=AttnCache(k=ks, v=vs),
+            cross=AttnCache(k=cks, v=cvs),
+            pos=jnp.asarray(length, jnp.int32),
+        )
+        logits = _unembed(p, cfg, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    bp_all = _block_params(p)
+
+    if cfg.arch_type == "ssm":
+
+        def body(carry, bp):
+            x = carry
+            sp = S.pick_ssm(bp, "")
+            xn = L.rmsnorm(x, sp.ln, cfg.norm_eps)
+            zxbcdt = xn @ sp.in_proj
+            z, xbc, dt = S._split_in_proj(cfg, zxbcdt)
+            conv_tail = jnp.concatenate(
+                [jnp.zeros((bsz, cfg.ssm_conv - 1, xbc.shape[-1]), xbc.dtype), xbc], axis=1
+            )[:, -(cfg.ssm_conv - 1) :, :]
+            xbc = S._causal_conv_train(xbc, sp.conv_w, sp.conv_b)
+            g, n = cfg.ssm_groups, cfg.ssm_state
+            xs, bmat, cmat = jnp.split(xbc, [cfg.ssm_inner, cfg.ssm_inner + g * n], axis=-1)
+            xs = xs.reshape(bsz, length, cfg.ssm_heads, cfg.ssm_head_dim)
+            dtv = jax.nn.softplus(dt.astype(jnp.float32) + sp.dt_bias)
+            a = -jnp.exp(sp.a_log.astype(jnp.float32))
+            y, hfin = S.ssd_scan(cfg, xs, dtv, a, bmat.reshape(bsz, length, g, n), cmat.reshape(bsz, length, g, n))
+            y = y + xs * sp.d_skip[None, None, :, None].astype(y.dtype)
+            y = y.reshape(bsz, length, cfg.ssm_inner) * jax.nn.silu(z)
+            y = L.rmsnorm(y, sp.out_norm, cfg.norm_eps)
+            x = _residual(x + y @ sp.out_proj, policy)
+            return x, (conv_tail, hfin)
+
+        x, (convs, states) = _scan(policy, body, x, bp_all)
+        cache = cache._replace(
+            ssm=SsmStack(conv=convs, state=states), pos=jnp.asarray(length, jnp.int32)
+        )
+        return _unembed(p, cfg, x[:, -1:, :])[:, 0, :], cache
+
+    if cfg.arch_type == "hybrid":
+        n_ssm = cfg.attn_every - 1
+
+        def body(carry, bp):
+            x = carry
+            ap = L.pick_attn(bp, "attn.")
+            ak, av = project_kv(ap, x)
+            x = x + L.attn_block(ap, x, cfg, positions, window=window, chunk=policy.attn_chunk)
+            d, _ = _mlp_or_moe(_index_sub(bp, "mlp.", 0), "mlp.", x, cfg)
+            x = _residual(x + d, policy)
+            convs, states = [], []
+            for i in range(n_ssm):
+                sp = S.pick_ssm(_index_sub(bp, "ssm.", i), "ssm.")
+                xn = L.rmsnorm(x, sp.ln, cfg.norm_eps)
+                zxbcdt = xn @ sp.in_proj
+                z, xbc, dt = S._split_in_proj(cfg, zxbcdt)
+                conv_tail = jnp.concatenate(
+                    [jnp.zeros((bsz, cfg.ssm_conv - 1, xbc.shape[-1]), xbc.dtype), xbc], axis=1
+                )[:, -(cfg.ssm_conv - 1) :, :]
+                xbc2 = S._causal_conv_train(xbc, sp.conv_w, sp.conv_b)
+                g, n = cfg.ssm_groups, cfg.ssm_state
+                xs, bmat, cmat = jnp.split(xbc2, [cfg.ssm_inner, cfg.ssm_inner + g * n], axis=-1)
+                xs = xs.reshape(bsz, length, cfg.ssm_heads, cfg.ssm_head_dim)
+                dtv = jax.nn.softplus(dt.astype(jnp.float32) + sp.dt_bias)
+                a = -jnp.exp(sp.a_log.astype(jnp.float32))
+                y, hfin = S.ssd_scan(
+                    cfg, xs, dtv, a, bmat.reshape(bsz, length, g, n), cmat.reshape(bsz, length, g, n)
+                )
+                y = y + xs * sp.d_skip[None, None, :, None].astype(y.dtype)
+                y = y.reshape(bsz, length, cfg.ssm_inner) * jax.nn.silu(z)
+                y = L.rmsnorm(y, sp.out_norm, cfg.norm_eps)
+                x = x + y @ sp.out_proj
+                d, _ = _mlp_or_moe(_index_sub(bp, "mlp.", i + 1), "mlp.", x, cfg)
+                x = _residual(x + d, policy)
+                convs.append(conv_tail)
+                states.append(hfin)
+            return x, (pad_cache(ak), pad_cache(av), jnp.stack(convs), jnp.stack(states))
+
+        x, (ks, vs, convs, states) = _scan(policy, body, x, bp_all)
+        cache = cache._replace(
+            attn=AttnCache(k=ks, v=vs),
+            ssm=SsmStack(conv=convs, state=states),
+            pos=jnp.asarray(length, jnp.int32),
+        )
+        return _unembed(p, cfg, x[:, -1:, :])[:, 0, :], cache
+
+    # dense / moe / vlm
+    def body2(carry, bp):
+        x = carry
+        ap = L.pick_attn(bp, "attn.")
+        k, v = project_kv(ap, x)
+        x = x + L.attn_block(ap, x, cfg, positions, window=window, chunk=policy.attn_chunk)
+        d, _ = _mlp_or_moe(bp, "mlp.", x, cfg)
+        return _residual(x + d, policy), (pad_cache(k), pad_cache(v))
+
+    x, (ks, vs) = _scan(policy, body2, x, bp_all)
+    cache = cache._replace(attn=AttnCache(k=ks, v=vs), pos=jnp.asarray(length, jnp.int32))
+    return _unembed(p, cfg, x[:, -1:, :])[:, 0, :], cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    p: Params, cfg: ModelConfig, cache: DecodeCache, token: jax.Array, policy: ShardingPolicy
+) -> tuple[jax.Array, DecodeCache]:
+    """One-token decode.  token (B, 1) int32 -> (logits (B, V), cache)."""
+    pos = cache.pos
+    bsz = token.shape[0]
+    x = _embed(p, cfg, token)
+    window = cfg.sliding_window
+    bp_all = _block_params(p)
+
+    if cfg.arch_type == "encdec":
+        x = x + jax.lax.dynamic_slice(p["dec_pos"], (pos, 0), (1, cfg.d_model))[None].astype(x.dtype)
+
+        def body(carry, xs):
+            x = carry
+            bp, kc, vc, ck, cv = xs
+            d, kc, vc = L.attn_decode(L.pick_attn(bp, "self."), x, cfg, kc, vc, pos)
+            x = x + d
+            d, _, _ = L.attn_decode(L.pick_attn(bp, "cross."), x, cfg, ck, cv, pos, cross=True)
+            x = x + d
+            x = x + L.mlp_block(bp, "mlp.", x, cfg)
+            return x, (kc, vc)
+
+        x, (ks, vs) = _scan(
+            policy, body, x, (bp_all, cache.attn.k, cache.attn.v, cache.cross.k, cache.cross.v)
+        )
+        new_cache = cache._replace(attn=AttnCache(k=ks, v=vs), pos=pos + 1)
+        return _unembed(p, cfg, x)[:, 0, :], new_cache
+
+    if cfg.arch_type == "ssm":
+
+        def body(carry, xs):
+            x = carry
+            bp, conv, state = xs
+            d, sc = S.ssm_block_decode(S.pick_ssm(bp, ""), x, cfg, S.SsmCache(conv, state))
+            return x + d, (sc.conv, sc.state)
+
+        x, (convs, states) = _scan(policy, body, x, (bp_all, cache.ssm.conv, cache.ssm.state))
+        new_cache = cache._replace(ssm=SsmStack(conv=convs, state=states), pos=pos + 1)
+        return _unembed(p, cfg, x)[:, 0, :], new_cache
+
+    if cfg.arch_type == "hybrid":
+        n_ssm = cfg.attn_every - 1
+
+        def body(carry, xs):
+            x = carry
+            bp, kc, vc, convs, states = xs
+            d, kc, vc = L.attn_decode(L.pick_attn(bp, "attn."), x, cfg, kc, vc, pos, window=window)
+            x = x + d
+            d, _ = _mlp_or_moe(_index_sub(bp, "mlp.", 0), "mlp.", x, cfg)
+            x = x + d
+            new_convs, new_states = [], []
+            for i in range(n_ssm):
+                sp = S.pick_ssm(_index_sub(bp, "ssm.", i), "ssm.")
+                d, sc = S.ssm_block_decode(sp, x, cfg, S.SsmCache(convs[i], states[i]))
+                x = x + d
+                d, _ = _mlp_or_moe(_index_sub(bp, "mlp.", i + 1), "mlp.", x, cfg)
+                x = x + d
+                new_convs.append(sc.conv)
+                new_states.append(sc.state)
+            return x, (kc, vc, jnp.stack(new_convs), jnp.stack(new_states))
+
+        x, (ks, vs, convs, states) = _scan(
+            policy, body, x, (bp_all, cache.attn.k, cache.attn.v, cache.ssm.conv, cache.ssm.state)
+        )
+        new_cache = cache._replace(
+            attn=AttnCache(k=ks, v=vs), ssm=SsmStack(conv=convs, state=states), pos=pos + 1
+        )
+        return _unembed(p, cfg, x)[:, 0, :], new_cache
+
+    # dense / moe / vlm
+    def body(carry, xs):
+        x = carry
+        bp, kc, vc = xs
+        d, kc, vc = L.attn_decode(L.pick_attn(bp, "attn."), x, cfg, kc, vc, pos, window=window)
+        x = x + d
+        d, _ = _mlp_or_moe(bp, "mlp.", x, cfg)
+        return x + d, (kc, vc)
+
+    x, (ks, vs) = _scan(policy, body, x, (bp_all, cache.attn.k, cache.attn.v))
+    new_cache = cache._replace(attn=AttnCache(k=ks, v=vs), pos=pos + 1)
+    return _unembed(p, cfg, x)[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins, Sec. MULTI-POD DRY-RUN item 2)
+# ---------------------------------------------------------------------------
+
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a step function."""
+    sh = INPUT_SHAPES[shape_name]
+    b, l = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if sh["kind"] == "train":
+        batch = {"tokens": sds((b, l), i32), "labels": sds((b, l), i32)}
+        if cfg.arch_type == "vlm":
+            batch["patches"] = sds((b, cfg.n_patches, cfg.d_model), f)
+            batch["positions"] = sds((b, l, 3), i32)
+        if cfg.arch_type == "encdec":
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), f)
+        return batch
+    if sh["kind"] == "prefill":
+        batch = {"tokens": sds((b, l), i32)}
+        if cfg.arch_type == "vlm":
+            batch["patches"] = sds((b, cfg.n_patches, cfg.d_model), f)
+            batch["positions"] = sds((b, l, 3), i32)
+        if cfg.arch_type == "encdec":
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), f)
+        return batch
+    # decode: one token against a seq_len cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, l))
+    return {"token": sds((b, 1), i32), "cache": cache}

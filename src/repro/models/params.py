@@ -1,0 +1,182 @@
+"""Parameter declaration: one table of (shape, logical shard axes, init kind)
+per architecture family.
+
+Params are a FLAT dict ``{name: array}``.  Block-stacked params carry a
+leading ``n_blocks`` dim and the prefix ``blocks/`` (scanned over in
+models/model.py); encoder blocks use ``enc_blocks/``.  The same table yields
+``init_params`` (materialized arrays, smoke tests), ``param_shapes``
+(ShapeDtypeStructs, dry-run) and ``param_pspecs`` (PartitionSpecs, mesh
+placement) -- a single source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.rules import spec_with_fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical shard axes, len == len(shape)
+    init: str  # normal | fan_in | zeros | ones | a_log | dt_bias
+
+
+def _attn_defs(cfg: ModelConfig, lead: tuple[int, ...], prefix: str) -> dict[str, ParamDef]:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs = {
+        f"{prefix}ln": ParamDef(lead + (d,), (None,) * len(lead) + (None,), "ones"),
+        f"{prefix}wq": ParamDef(lead + (d, q), (None,) * len(lead) + (None, "model"), "fan_in"),
+        f"{prefix}wk": ParamDef(lead + (d, kv), (None,) * len(lead) + (None, "model"), "fan_in"),
+        f"{prefix}wv": ParamDef(lead + (d, kv), (None,) * len(lead) + (None, "model"), "fan_in"),
+        f"{prefix}wo": ParamDef(lead + (q, d), (None,) * len(lead) + ("model", None), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        defs |= {
+            f"{prefix}bq": ParamDef(lead + (q,), (None,) * len(lead) + ("model",), "zeros"),
+            f"{prefix}bk": ParamDef(lead + (kv,), (None,) * len(lead) + ("model",), "zeros"),
+            f"{prefix}bv": ParamDef(lead + (kv,), (None,) * len(lead) + ("model",), "zeros"),
+        }
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, lead: tuple[int, ...], prefix: str) -> dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    nl = len(lead)
+    if cfg.is_moe_mlp:
+        e = cfg.n_experts
+        defs = {
+            f"{prefix}ln": ParamDef(lead + (d,), (None,) * nl + (None,), "ones"),
+            f"{prefix}router": ParamDef(lead + (d, e), (None,) * nl + (None, None), "fan_in"),
+            f"{prefix}we_gate": ParamDef(lead + (e, d, ff), (None,) * nl + ("model", None, None), "fan_in"),
+            f"{prefix}we_up": ParamDef(lead + (e, d, ff), (None,) * nl + ("model", None, None), "fan_in"),
+            f"{prefix}we_down": ParamDef(lead + (e, ff, d), (None,) * nl + ("model", None, None), "fan_in"),
+        }
+        if cfg.n_shared_experts:
+            sf = ff * cfg.n_shared_experts
+            defs |= {
+                f"{prefix}ws_gate": ParamDef(lead + (d, sf), (None,) * nl + (None, "model"), "fan_in"),
+                f"{prefix}ws_up": ParamDef(lead + (d, sf), (None,) * nl + (None, "model"), "fan_in"),
+                f"{prefix}ws_down": ParamDef(lead + (sf, d), (None,) * nl + ("model", None), "fan_in"),
+            }
+        return defs
+    return {
+        f"{prefix}ln": ParamDef(lead + (d,), (None,) * nl + (None,), "ones"),
+        f"{prefix}w_gate": ParamDef(lead + (d, ff), (None,) * nl + (None, "model"), "fan_in"),
+        f"{prefix}w_up": ParamDef(lead + (d, ff), (None,) * nl + (None, "model"), "fan_in"),
+        f"{prefix}w_down": ParamDef(lead + (ff, d), (None,) * nl + ("model", None), "fan_in"),
+    }
+
+
+def _ssm_defs(cfg: ModelConfig, lead: tuple[int, ...], prefix: str) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    nl = len(lead)
+    return {
+        f"{prefix}ln": ParamDef(lead + (d,), (None,) * nl + (None,), "ones"),
+        f"{prefix}in_proj": ParamDef(
+            lead + (d, cfg.ssm_in_proj_dim), (None,) * nl + (None, "model"), "fan_in"
+        ),
+        f"{prefix}conv_w": ParamDef(
+            lead + (cfg.ssm_conv, cfg.ssm_conv_channels), (None,) * nl + (None, "model"), "fan_in"
+        ),
+        f"{prefix}conv_b": ParamDef(
+            lead + (cfg.ssm_conv_channels,), (None,) * nl + ("model",), "zeros"
+        ),
+        f"{prefix}a_log": ParamDef(lead + (cfg.ssm_heads,), (None,) * nl + ("model",), "a_log"),
+        f"{prefix}d_skip": ParamDef(lead + (cfg.ssm_heads,), (None,) * nl + ("model",), "ones"),
+        f"{prefix}dt_bias": ParamDef(lead + (cfg.ssm_heads,), (None,) * nl + ("model",), "dt_bias"),
+        f"{prefix}out_norm": ParamDef(lead + (cfg.ssm_inner,), (None,) * nl + ("model",), "ones"),
+        f"{prefix}out_proj": ParamDef(
+            lead + (cfg.ssm_inner, d), (None,) * nl + ("model", None), "fan_in"
+        ),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, v = cfg.d_model, cfg.vocab_size
+    nb = cfg.n_blocks
+    defs: dict[str, ParamDef] = {
+        "embed": ParamDef((v, d), ("model", None), "normal"),
+        "final_norm": ParamDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), (None, "model"), "fan_in")
+
+    lead = (nb,)
+    if cfg.arch_type == "ssm":
+        defs |= _ssm_defs(cfg, lead, "blocks/")
+    elif cfg.arch_type == "hybrid":
+        # Super-block = 1 attention layer + (attn_every - 1) mamba layers,
+        # every layer followed by the (MoE) MLP.
+        n_ssm = cfg.attn_every - 1
+        defs |= _attn_defs(cfg, lead, "blocks/attn.")
+        defs |= _ssm_defs(cfg, lead + (n_ssm,), "blocks/ssm.")
+        defs |= _mlp_defs(cfg, lead + (cfg.attn_every,), "blocks/mlp.")
+    elif cfg.arch_type == "encdec":
+        defs |= _attn_defs(cfg, lead, "blocks/self.")
+        defs |= _attn_defs(cfg, lead, "blocks/cross.")
+        defs |= _mlp_defs(cfg, lead, "blocks/mlp.")
+        enc_lead = (cfg.n_enc_layers,)
+        defs |= _attn_defs(cfg, enc_lead, "enc_blocks/attn.")
+        defs |= _mlp_defs(cfg, enc_lead, "enc_blocks/mlp.")
+        defs["enc_norm"] = ParamDef((d,), (None,), "ones")
+        defs["enc_pos"] = ParamDef((cfg.enc_seq, d), (None, None), "normal")
+        defs["dec_pos"] = ParamDef((cfg.dec_pos_len, d), (None, None), "normal")
+    else:  # dense | moe | vlm
+        defs |= _attn_defs(cfg, lead, "blocks/attn.")
+        defs |= _mlp_defs(cfg, lead, "blocks/mlp.")
+    return defs
+
+
+# -- materialization ----------------------------------------------------------
+
+
+def _init_leaf(key: jax.Array, pd: ParamDef, dtype) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    if pd.init == "normal":
+        return (0.02 * jax.random.normal(key, pd.shape)).astype(dtype)
+    if pd.init == "fan_in":
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(key, pd.shape)).astype(dtype)
+    if pd.init == "a_log":
+        # A in [1, 16] as in Mamba2; stored as log(A), used as -exp(a_log).
+        u = jax.random.uniform(key, pd.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dtype)
+    if pd.init == "dt_bias":
+        # dt in [1e-3, 1e-1] through softplus-inverse.
+        u = jax.random.uniform(key, pd.shape, minval=1e-3, maxval=1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    raise ValueError(pd.init)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    dtype = jnp.dtype(cfg.dtype)
+    defs = param_defs(cfg)
+    keys = jax.random.split(key, len(defs))
+    return {name: _init_leaf(k, pd, dtype) for (name, pd), k in zip(sorted(defs.items()), keys)}
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    dtype = jnp.dtype(cfg.dtype)
+    return {n: jax.ShapeDtypeStruct(pd.shape, dtype) for n, pd in param_defs(cfg).items()}
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> dict:
+    return {
+        n: spec_with_fallback(mesh, pd.shape, pd.axes) for n, pd in param_defs(cfg).items()
+    }
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(pd.shape) for pd in param_defs(cfg).values())

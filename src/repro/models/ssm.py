@@ -1,0 +1,217 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+(attention-dual) matmuls + an inter-chunk linear recurrence over chunk
+states, which is O(L) in sequence length and maps onto the MXU as batched
+GEMMs.  Decode is the O(1) recurrent update  h <- exp(dt*A) h + dt * B x^T.
+
+Layout: heads (H = expand*d/headdim) shard over 'model'; B/C use
+``ssm_groups`` groups broadcast across heads (G=1 for mamba2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.sharding.rules import constrain
+
+
+class SsmParams(NamedTuple):
+    ln: jax.Array
+    in_proj: jax.Array  # (d, 2*din + 2*G*N + H)
+    conv_w: jax.Array  # (K, conv_channels)
+    conv_b: jax.Array  # (conv_channels,)
+    a_log: jax.Array  # (H,)
+    d_skip: jax.Array  # (H,)
+    dt_bias: jax.Array  # (H,)
+    out_norm: jax.Array  # (din,)
+    out_proj: jax.Array  # (din, d)
+
+
+def pick_ssm(p: dict, prefix: str) -> SsmParams:
+    return SsmParams(
+        ln=p[f"{prefix}ln"],
+        in_proj=p[f"{prefix}in_proj"],
+        conv_w=p[f"{prefix}conv_w"],
+        conv_b=p[f"{prefix}conv_b"],
+        a_log=p[f"{prefix}a_log"],
+        d_skip=p[f"{prefix}d_skip"],
+        dt_bias=p[f"{prefix}dt_bias"],
+        out_norm=p[f"{prefix}out_norm"],
+        out_proj=p[f"{prefix}out_proj"],
+    )
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    din = cfg.ssm_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [din, din + din + 2 * gn], axis=-1)
+    return z, xbc, dt  # z (…,din), xbc (…, din+2GN), dt (…, H)
+
+
+def _causal_conv_train(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  xbc (B, L, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # K is 4; unrolled shifts beat conv layout shuffles on TPU
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(a_chunk: jax.Array) -> jax.Array:
+    """a (B, C, Q, H) log-decays -> L (B, C, H, Q, Q) with
+    L[q, s] = exp(sum_{i=s+1..q} a_i) for q >= s else 0."""
+    q = a_chunk.shape[2]
+    cum = jnp.cumsum(a_chunk, axis=2)  # (B, C, Q, H)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,C,Q,S,H): sum_{s+1..q}
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    return jnp.exp(diff).transpose(0, 1, 4, 2, 3)  # (B, C, H, Q, S)
+
+
+def ssd_scan(
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, L, H, P) inputs (already dt-unscaled)
+    dt: jax.Array,  # (B, L, H) positive step sizes
+    a: jax.Array,  # (H,) negative decay rates (-exp(a_log))
+    bmat: jax.Array,  # (B, L, G, N)
+    cmat: jax.Array,  # (B, L, G, N)
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l_orig, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.ssm_chunk, l_orig)
+    # Pad the sequence to a chunk multiple.  Padded steps use dt = 0, i.e.
+    # identity decay and zero input -- they change neither outputs nor the
+    # final state (property-tested).
+    pad = (-l_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_orig + pad
+    c = l // q
+    rep = h // g
+
+    xr = x.reshape(bsz, c, q, h, p)
+    dtr = dt.reshape(bsz, c, q, h)
+    br = jnp.repeat(bmat.reshape(bsz, c, q, g, n), rep, axis=3)  # (B,C,Q,H,N)
+    cr = jnp.repeat(cmat.reshape(bsz, c, q, g, n), rep, axis=3)
+
+    a_steps = dtr * a  # (B, C, Q, H) log-decay per step
+    dtx = xr * dtr[..., None]  # (B, C, Q, H, P)
+
+    # --- within-chunk (quadratic, attention-dual) ---
+    lmask = _segsum_decay(a_steps)  # (B, C, H, Q, S)
+    cb = jnp.einsum("bcqhn,bcshn->bchqs", cr, br, preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", cb * lmask, dtx.astype(jnp.float32))
+
+    # --- chunk states ---
+    cum = jnp.cumsum(a_steps, axis=2)  # (B, C, Q, H)
+    total = cum[:, :, -1:, :]  # (B, C, 1, H)
+    decay_to_end = jnp.exp(total - cum)  # (B, C, Q, H) decay from step q to chunk end
+    states = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", br.astype(jnp.float32), decay_to_end, dtx.astype(jnp.float32)
+    )  # (B, C, H, P, N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B, C, H)
+
+    def step(hprev, inputs):
+        st, dec = inputs  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    init = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+    hfinal, hprevs = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (B, C, H, P, N) state entering each chunk
+
+    # --- off-chunk contribution ---
+    in_decay = jnp.exp(cum)  # (B, C, Q, H) decay from chunk start to step q
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", cr.astype(jnp.float32), in_decay, hprevs)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :l_orig]
+    return y.astype(x.dtype), hfinal
+
+
+def ssm_block_train(
+    sp: SsmParams, x: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Full-sequence Mamba2 block.  x (B, L, d) -> residual delta."""
+    bsz, l, d = x.shape
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xn = rmsnorm(x, sp.ln, cfg.norm_eps)
+    zxbcdt = constrain(xn @ sp.in_proj, None, None, "model")
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = _causal_conv_train(xbc, sp.conv_w, sp.conv_b)
+    xs, bmat, cmat = jnp.split(xbc, [cfg.ssm_inner, cfg.ssm_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, l, h, p)
+    bmat = bmat.reshape(bsz, l, g, n)
+    cmat = cmat.reshape(bsz, l, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + sp.dt_bias)  # (B, L, H)
+    a = -jnp.exp(sp.a_log.astype(jnp.float32))  # (H,)
+    y, _ = ssd_scan(cfg, xs, dtv, a, bmat, cmat)
+    y = y + xs * sp.d_skip[None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, l, cfg.ssm_inner)
+    y = y * jax.nn.silu(z)  # gated output
+    y = rmsnorm(y, sp.out_norm, cfg.norm_eps)
+    return constrain(y @ sp.out_proj, None, None, None)
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_channels) rolling conv inputs
+    state: jax.Array  # (B, H, P, N) SSD recurrent state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SsmCache:
+    return SsmCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_conv_channels), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    )
+
+
+def ssm_block_decode(
+    sp: SsmParams, x: jax.Array, cfg: ModelConfig, cache: SsmCache
+) -> tuple[jax.Array, SsmCache]:
+    """One-token recurrent update.  x (B, 1, d) -> (delta, cache)."""
+    bsz = x.shape[0]
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    xn = rmsnorm(x[:, 0, :], sp.ln, cfg.norm_eps)  # (B, d)
+    zxbcdt = xn @ sp.in_proj
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+
+    # rolling causal conv
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, sp.conv_w) + sp.conv_b
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xs, bmat, cmat = jnp.split(xbc, [cfg.ssm_inner, cfg.ssm_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, h, p)
+    bmat = jnp.repeat(bmat.reshape(bsz, g, n), h // g, axis=1)  # (B, H, N)
+    cmat = jnp.repeat(cmat.reshape(bsz, g, n), h // g, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + sp.dt_bias)  # (B, H)
+    a = -jnp.exp(sp.a_log.astype(jnp.float32))
+    decay = jnp.exp(dtv * a)  # (B, H)
+
+    dbx = jnp.einsum("bh,bhp,bhn->bhpn", dtv, xs.astype(jnp.float32), bmat.astype(jnp.float32))
+    new_state = cache.state * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cmat.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * sp.d_skip[None, :, None].astype(jnp.float32)
+    y = y.reshape(bsz, cfg.ssm_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, sp.out_norm, cfg.norm_eps)
+    delta = (y @ sp.out_proj)[:, None, :]
+    return delta, SsmCache(conv=new_conv, state=new_state)

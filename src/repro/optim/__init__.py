@@ -1,0 +1,24 @@
+"""Pure-JAX optimizers (no optax in the environment).
+
+Used both by the federated-ZOO local updates (paper Appx. E uses Adam with
+lr 0.01) and by the first-order LM-training substrate (examples/train driver).
+Everything is a pytree-in / pytree-out pure function so it vmaps, scans and
+shard_maps cleanly.
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    AdamState,
+    OptState,
+    adam_init,
+    adam_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    sgd_init,
+    sgd_update,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_decay_schedule,
+    warmup_cosine_schedule,
+)

@@ -1,0 +1,116 @@
+"""SGD / Adam / AdamW over arbitrary pytrees."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    step: jax.Array  # () int32
+
+
+class OptState(NamedTuple):
+    """Generic wrapper so callers can switch optimizers without re-plumbing."""
+
+    inner: Any
+
+
+def _zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+# -- SGD ---------------------------------------------------------------------
+
+
+def sgd_init(params: Pytree) -> OptState:
+    del params
+    return OptState(inner=())
+
+
+def sgd_update(
+    state: OptState, grads: Pytree, params: Pytree, lr: float | jax.Array, momentum: float = 0.0
+) -> tuple[Pytree, OptState]:
+    if momentum and state.inner == ():
+        raise ValueError("momentum SGD requires sgd_momentum_init")
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, state
+
+
+# -- Adam --------------------------------------------------------------------
+
+
+def adam_init(params: Pytree) -> OptState:
+    return OptState(inner=AdamState(mu=_zeros_like(params), nu=_zeros_like(params), step=jnp.zeros((), jnp.int32)))
+
+
+def adam_update(
+    state: OptState,
+    grads: Pytree,
+    params: Pytree,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[Pytree, OptState]:
+    st: AdamState = state.inner
+    step = st.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, st.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * (g * g), st.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), params, mu, nu
+    )
+    return new_params, OptState(inner=AdamState(mu=mu, nu=nu, step=step))
+
+
+# -- AdamW (LM training substrate) -------------------------------------------
+
+
+def adamw_init(params: Pytree) -> OptState:
+    return adam_init(params)
+
+
+def adamw_update(
+    state: OptState,
+    grads: Pytree,
+    params: Pytree,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Pytree, OptState]:
+    st: AdamState = state.inner
+    step = st.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, st.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * (g * g), st.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p),
+        params,
+        mu,
+        nu,
+    )
+    return new_params, OptState(inner=AdamState(mu=mu, nu=nu, step=step))
+
+
+# -- dispatch ------------------------------------------------------------------
+
+
+def make_optimizer(name: str) -> tuple[Callable[..., OptState], Callable[..., tuple[Pytree, OptState]]]:
+    if name == "sgd":
+        return sgd_init, sgd_update
+    if name == "adam":
+        return adam_init, adam_update
+    if name == "adamw":
+        return adamw_init, adamw_update
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,30 @@
+"""Learning-rate schedules for the LM-training substrate."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def cosine_decay_schedule(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def warmup_cosine_schedule(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay_schedule(peak, max(total_steps - warmup_steps, 1), floor)
+
+    def fn(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,11 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingPolicy,
+    batch_axes,
+    constrain,
+    get_mesh,
+    mesh_context,
+    param_pspecs_from_axes,
+    set_mesh,
+    spec_with_fallback,
+    zero1_extend,
+)

@@ -1,0 +1,136 @@
+"""Algorithm-level tests: Prop. 1, query/communication accounting, one-round
+execution of all five algorithms, and the paper's headline ordering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.core import fd as fdlib
+from repro.core import objectives as obj
+
+
+def _cfg(name, **kw):
+    base = dict(
+        name=name, dim=10, n_clients=4, local_steps=4, q=8, n_features=64,
+        traj_capacity=48, active_per_iter=2, active_candidates=16,
+        active_round_end=2, eta=0.01, lengthscale=0.5, noise=1e-5,
+    )
+    base.update(kw)
+    return alg.AlgoConfig(**base)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_prop1_gamma_star_minimizes_disparity(seed):
+    """Prop. 1: gamma* is the argmin of Xi(gamma) -- check against a grid."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = 6
+    grad_f = jax.random.normal(k1, (d,))
+    g_loc = jax.random.normal(k2, (d,))
+    corr = jax.random.normal(k3, (d,))
+    g_star = float(alg.optimal_gamma_star(grad_f, g_loc, corr))
+
+    def xi(gamma):
+        return float(alg.disparity(g_loc + gamma * corr, grad_f))
+
+    for g in np.linspace(g_star - 2, g_star + 2, 41):
+        assert xi(g_star) <= xi(float(g)) + 1e-5
+
+
+def test_prop1_zero_disparity_iff_perfect_alignment():
+    d = 5
+    grad_f = jnp.arange(1.0, d + 1)
+    g_loc = jnp.ones((d,))
+    corr = grad_f - g_loc  # perfectly aligned drift
+    assert float(alg.optimal_gamma_star(grad_f, g_loc, corr)) == pytest.approx(1.0, abs=1e-6)
+    assert float(alg.disparity(g_loc + 1.0 * corr, grad_f)) == pytest.approx(0.0, abs=1e-10)
+
+
+def test_query_accounting_static_vs_runtime():
+    """The runtime query counters must match the static prediction."""
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, 4, 10, 1.0, 0.001)
+    for name in alg.ALGORITHMS:
+        cfg = _cfg(name)
+        res = alg.simulate(cfg, jax.random.PRNGKey(1), cobjs, obj.quadratic_query,
+                           obj.quadratic_global_value, rounds=3)
+        expected = 3 * cfg.queries_per_round()
+        assert int(res.queries[-1]) == expected, (name, int(res.queries[-1]), expected)
+
+
+def test_comm_accounting():
+    fz = _cfg("fzoos", n_features=100)
+    assert fz.comm_floats_per_round() == 10 + 100
+    assert _cfg("fedzo").comm_floats_per_round() == 10
+    assert _cfg("scaffold1").comm_floats_per_round() == 20
+    assert _cfg("fedprox").comm_floats_per_round() == 10
+
+
+@pytest.mark.parametrize("name", alg.ALGORITHMS)
+def test_one_round_runs_and_is_finite(name):
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, 4, 10, 5.0, 0.001)
+    cfg = _cfg(name)
+    res = alg.simulate(cfg, jax.random.PRNGKey(1), cobjs, obj.quadratic_query,
+                       obj.quadratic_global_value, rounds=2)
+    assert np.isfinite(np.asarray(res.f_values)).all()
+    assert np.isfinite(np.asarray(res.xs)).all()
+    assert bool(jnp.all((res.xs >= 0) & (res.xs <= 1)))
+
+
+def test_fd_estimator_accuracy_improves_with_q():
+    f = lambda cp, x, key: jnp.sum(x**2)  # noiseless query
+    x = jnp.full((8,), 0.3)
+    true = 2 * x
+
+    def err(q, seed):
+        dirs = fdlib.sample_directions(jax.random.PRNGKey(seed), q, 8)
+        g = fdlib.fd_grad(f, None, x, jax.random.PRNGKey(seed + 1), dirs, 1e-4)
+        return float(jnp.linalg.norm(g - true))
+
+    e_small = np.mean([err(4, s) for s in range(5)])
+    e_big = np.mean([err(64, s + 50) for s in range(5)])
+    assert e_big < e_small
+
+
+def test_fzoos_beats_fedzo_in_query_efficiency():
+    """The paper's headline (Fig. 1): FZooS reaches a better F with FEWER
+    queries than FedZO on the heterogeneous quadratic."""
+    key = jax.random.PRNGKey(0)
+    d, n = 20, 5
+    cobjs = obj.make_quadratic(key, n, d, 5.0, 0.001)
+    common = dict(dim=d, n_clients=n, local_steps=10, eta=0.005,
+                  lengthscale=0.5, noise=1e-5)
+    fz = alg.AlgoConfig(name="fzoos", n_features=256, traj_capacity=128,
+                        active_per_iter=5, active_candidates=50, active_round_end=5,
+                        **common)
+    fd = alg.AlgoConfig(name="fedzo", q=20, fd_lambda=5e-3, **common)
+    r_fz = alg.simulate(fz, jax.random.PRNGKey(1), cobjs, obj.quadratic_query,
+                        obj.quadratic_global_value, rounds=15)
+    r_fd = alg.simulate(fd, jax.random.PRNGKey(1), cobjs, obj.quadratic_query,
+                        obj.quadratic_global_value, rounds=15)
+    assert float(jnp.min(r_fz.f_values)) < float(jnp.min(r_fd.f_values)) + 5e-3
+    assert int(r_fz.queries[-1]) < int(r_fd.queries[-1])
+
+
+def test_round_resets_client_iterate_to_server_x():
+    """After every round all clients hold the aggregated x (Algo. 2 line 3/7)."""
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, 4, 6, 1.0, 0.001)
+    cfg = _cfg("fzoos", dim=6)
+    states = alg.init_states(cfg, jax.random.PRNGKey(1), jnp.full((6,), 0.5))
+    mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
+    import repro.core.rff as rfflib
+
+    rff = rfflib.make_rff(jax.random.PRNGKey(2), cfg.n_features, 6, cfg.lengthscale)
+    states, stats = alg.run_round(cfg, rff, obj.quadratic_query, cobjs, states,
+                                  jnp.full((6,), 0.5), mean_fn)
+    xs = np.asarray(states.x)
+    np.testing.assert_allclose(xs, np.broadcast_to(np.asarray(stats.server_x), xs.shape), atol=1e-6)
+    # every client holds the SAME aggregated w (eq. 7 broadcast)
+    wg = np.asarray(states.w_global)
+    assert np.allclose(wg, wg[0:1], atol=1e-6)

@@ -1,0 +1,116 @@
+"""Unit tests for the dry-run analysis machinery (no 512-device init --
+pure parsing/extrapolation logic)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (
+    _COLLECTIVES,
+    _extrapolate,
+    _shape_bytes,
+    applicable,
+    depth_variant,
+    parse_collectives,
+)
+from repro.configs import ARCH_IDS, get_config
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert _shape_bytes("(f32[8], bf16[4,4])") == 32 + 32
+    assert _shape_bytes("pred[7]") == 7
+    assert _shape_bytes("token[]") == 0
+
+
+SAMPLE_HLO = """
+HloModule test
+fused_computation {
+  x = f32[128,256] parameter(0)
+}
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(f32[128,256]{1,0} %p0), dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %p0), to_apply=add
+  %ars = f32[128,256]{1,0} all-reduce-start(f32[128,256]{1,0} %p0), to_apply=add
+  %ard = f32[128,256]{1,0} all-reduce-done(f32[128,256]{1,0} %ars)
+  %rs = f32[8,256]{1,0} reduce-scatter(f32[128,256]{1,0} %p0), dimensions={0}
+  %a2a = f32[128,256]{1,0} all-to-all(f32[128,256]{1,0} %p0), dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(f32[128,256]{1,0} %p0), source_target_pairs={{0,1}}
+  %t = (f32[64,64]{1,0}, f32[64,64]{1,0}) all-gather(f32[32,64] %p0x, f32[32,64] %p0y), dimensions={0}
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    got = parse_collectives(SAMPLE_HLO)
+    f = lambda n: n * 4
+    assert got["all-gather"]["count"] == 2
+    assert got["all-gather"]["bytes"] == f(2048 * 256) + 2 * f(64 * 64)
+    # all-reduce: plain + start form; -done NOT double counted
+    assert got["all-reduce"]["count"] == 2
+    assert got["all-reduce"]["bytes"] == 2 * f(128 * 256)
+    assert got["reduce-scatter"]["bytes"] == f(8 * 256)
+    assert got["all-to-all"]["count"] == 1
+    assert got["collective-permute"]["count"] == 1
+    assert got["total_bytes"] == sum(
+        got[c]["bytes"] for c in _COLLECTIVES
+    )
+
+
+def test_extrapolation_linear_exact():
+    d2 = {"cost": {"flops": 100.0, "bytes accessed": 10.0},
+          "collectives": {"all-reduce": {"bytes": 8, "count": 2}, "total_bytes": 8,
+                          "all-gather": {"bytes": 0, "count": 0},
+                          "reduce-scatter": {"bytes": 0, "count": 0},
+                          "all-to-all": {"bytes": 0, "count": 0},
+                          "collective-permute": {"bytes": 0, "count": 0}}}
+    d4 = {"cost": {"flops": 160.0, "bytes accessed": 14.0},
+          "collectives": {"all-reduce": {"bytes": 12, "count": 4}, "total_bytes": 12,
+                          "all-gather": {"bytes": 0, "count": 0},
+                          "reduce-scatter": {"bytes": 0, "count": 0},
+                          "all-to-all": {"bytes": 0, "count": 0},
+                          "collective-permute": {"bytes": 0, "count": 0}}}
+    ex = _extrapolate(d2, d4, 10, ka=2, kb=4)
+    # per-block = 30 flops; F(10) = 100 + 8*30 = 340
+    assert ex["cost"]["flops"] == 340.0
+    assert ex["cost"]["bytes accessed"] == pytest.approx(10 + 8 * 2.0)
+    assert ex["collectives"]["all-reduce"] == 8 + 8 * 2.0
+    assert ex["per_block"]["flops"] == 30.0
+    # default depths 1/2
+    ex2 = _extrapolate(d2, d4, 3)
+    assert ex2["cost"]["flops"] == pytest.approx(100 + 2 * 60.0)
+
+
+def test_depth_variant_families():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "full")
+        dv = depth_variant(cfg, 2)
+        assert dv.n_blocks == 2, arch
+        assert dv.d_model == cfg.d_model
+        if cfg.arch_type == "encdec":
+            assert dv.n_enc_layers == 2
+
+
+def test_applicability_matrix():
+    """The skip table from DESIGN.md Arch-applicability."""
+    long_ok = {"llama4_maverick_400b_a17b", "llama4_scout_17b_16e",
+               "mamba2_370m", "jamba_1_5_large_398b"}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "full")
+        ok, why = applicable(cfg, "long_500k")
+        assert ok == (arch in long_ok), (arch, why)
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            ok, _ = applicable(cfg, shape)
+            assert ok, (arch, shape)
+
+
+def test_expected_combo_count():
+    """10 archs x 4 shapes = 40 combos; 6 long_500k skips -> 34 lowered."""
+    lowered = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "full")
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if applicable(cfg, shape)[0]:
+                lowered += 1
+    assert lowered == 34

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (deliverable f) + cross-path consistency:
+reduced configs run a real forward/train/prefill/decode step on CPU with
+shape and finiteness assertions; cached decode must agree with the full
+forward pass."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    count_params,
+    decode_step,
+    forward,
+    init_train_state,
+    input_specs,
+    prefill,
+    train_step,
+)
+from repro.sharding.rules import ShardingPolicy
+
+POLICY = ShardingPolicy(remat=False)
+B, L = 2, 48
+
+
+def _batch(cfg, key, length=L, labels=True):
+    out = {"tokens": jax.random.randint(key, (B, length), 0, cfg.vocab_size)}
+    if labels:
+        out["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (B, length), 0, cfg.vocab_size)
+    if cfg.arch_type == "vlm":
+        out["patches"] = 0.1 * jax.random.normal(key, (B, cfg.n_patches, cfg.d_model), jnp.float32)
+        out["positions"] = jnp.broadcast_to(
+            jnp.arange(length)[None, :, None], (B, length, 3)
+        ).astype(jnp.int32)
+    if cfg.arch_type == "encdec":
+        out["frames"] = 0.1 * jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, "smoke")
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    p, opt = init_train_state(key, cfg)
+    p2, opt2, metrics = train_step(p, opt, cfg, _batch(cfg, key), POLICY, lr=1e-3)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = max(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(p2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_config(arch, "smoke")
+    key = jax.random.PRNGKey(0)
+    p, _ = init_train_state(key, cfg)
+    batch = _batch(cfg, key, labels=False)
+    logits, cache = prefill(p, cfg, batch, POLICY, cache_len=L + 8)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert int(cache.pos) == L
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = decode_step(p, cfg, cache, tok, POLICY)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert int(cache2.pos) == L + 1
+    assert np.isfinite(np.asarray(logits2, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize(
+    "arch,tol",
+    [
+        ("qwen1_5_0_5b", 1e-5),
+        ("gemma_7b", 1e-5),
+        ("yi_34b", 1e-5),
+        ("minitron_8b", 1e-5),
+        ("llama4_scout_17b_16e", 1e-5),  # capacity-safe at this size
+        ("qwen2_vl_7b", 1e-5),
+        ("mamba2_370m", 0.05),  # bf16 recurrent-vs-chunked paths
+        ("whisper_base", 0.02),
+        ("jamba_1_5_large_398b", 0.08),
+    ],
+)
+def test_decode_matches_forward(arch, tol):
+    """decode_step(t=L) must equal forward's logits at position L."""
+    cfg = get_config(arch, "smoke")
+    if cfg.is_moe_mlp:
+        # make token-drop impossible so both paths see identical routing
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p, _ = init_train_state(key, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L + 1), 0, cfg.vocab_size)
+    bf = _batch(cfg, key, length=L + 1, labels=False)
+    bf["tokens"] = toks
+    bp = _batch(cfg, key, length=L, labels=False)
+    bp["tokens"] = toks[:, :L]
+    lg_full, _ = forward(p, cfg, bf, POLICY)
+    _, cache = prefill(p, cfg, bp, POLICY, cache_len=L + 8)
+    lg_dec, _ = decode_step(p, cfg, cache, toks[:, L : L + 1].astype(jnp.int32), POLICY)
+    scale = float(jnp.abs(lg_full.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(lg_dec.astype(jnp.float32) - lg_full[:, L].astype(jnp.float32)).max())
+    assert err / scale < tol, (err, scale)
+
+
+def test_input_specs_cover_all_shapes():
+    from repro.models.model import INPUT_SHAPES
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "full")
+        for shape in INPUT_SHAPES:
+            specs = input_specs(cfg, shape)
+            assert isinstance(specs, dict) and specs
+            for v in jax.tree_util.tree_leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_param_count_analytic_vs_actual():
+    """config.param_count() (roofline bookkeeping) tracks real param counts."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "smoke")
+        analytic = cfg.param_count()
+        actual = count_params(cfg)
+        assert abs(analytic - actual) / actual < 0.15, (arch, analytic, actual)
+
+
+def test_full_config_numbers_match_assignment():
+    """The ten FULL configs carry exactly the published dimensions."""
+    want = {
+        "llama4_maverick_400b_a17b": (48, 5120, 40, 8, 8192, 202048, 128),
+        "llama4_scout_17b_16e": (48, 5120, 40, 8, 8192, 202048, 16),
+        "jamba_1_5_large_398b": (72, 8192, 64, 8, 24576, 65536, 16),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000, 0),
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000, 0),
+        "minitron_8b": (32, 4096, 32, 8, 16384, 256000, 0),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064, 0),
+        "qwen1_5_0_5b": (24, 1024, 16, 16, 2816, 151936, 0),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865, 0),
+        "mamba2_370m": (48, 1024, 0, 0, 0, 50280, 0),
+    }
+    for arch, (nl, dm, nh, kv, ff, vs, ne) in want.items():
+        cfg = get_config(arch, "full")
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size, cfg.n_experts)
+        assert got == (nl, dm, nh, kv, ff, vs, ne), (arch, got)
+    assert get_config("mamba2_370m", "full").ssm_state == 128
+    assert get_config("jamba_1_5_large_398b", "full").attn_every == 8
+    assert get_config("jamba_1_5_large_398b", "full").moe_top_k == 2
+    assert get_config("qwen2_vl_7b", "full").qkv_bias
+    assert get_config("qwen1_5_0_5b", "full").qkv_bias
+    assert get_config("gemma_7b", "full").head_dim == 256
+    assert get_config("gemma_7b", "full").mlp_act == "geglu"

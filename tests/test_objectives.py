@@ -1,0 +1,111 @@
+"""Objective tests: the paper's synthetic quadratics (Appx. E.1) and the
+model-backed attack / metric / LM objectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import model_objectives as mobj
+from repro.core import objectives as obj
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.floats(0.0, 50.0), seed=st.integers(0, 1000))
+def test_global_quadratic_independent_of_heterogeneity(c, seed):
+    """F(x) = mean_i f_i(x) must NOT depend on C (Dirichlet weights sum to 1)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(jax.random.fold_in(key, 1), (12,))
+    f_c = obj.quadratic_global_value(obj.make_quadratic(key, 5, 12, c), x)
+    f_0 = obj.quadratic_global_value(obj.make_quadratic(key, 5, 12, 0.0), x)
+    assert float(jnp.abs(f_c - f_0)) < 1e-4
+
+
+def test_quadratic_optimum():
+    key = jax.random.PRNGKey(0)
+    d = 16
+    cobjs = obj.make_quadratic(key, 4, d, 5.0)
+    xstar = obj.quadratic_optimum_unit(d)
+    fstar = obj.quadratic_fstar(d)
+    assert float(obj.quadratic_global_value(cobjs, xstar)) == pytest.approx(fstar, abs=1e-5)
+    g = obj.quadratic_global_grad(cobjs, xstar)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-4)
+    # any other point is worse
+    other = jnp.clip(xstar + 0.1, 0, 1)
+    assert float(obj.quadratic_global_value(cobjs, other)) > fstar
+
+
+def test_heterogeneity_grows_with_c():
+    key = jax.random.PRNGKey(1)
+    d = 10
+    probes = jax.random.uniform(jax.random.fold_in(key, 2), (8, d))
+    gs = [
+        float(obj.heterogeneity_g(obj.quadratic_grad, obj.make_quadratic(key, 5, d, c), probes))
+        for c in (0.5, 5.0, 50.0)
+    ]
+    assert gs[0] < gs[1] < gs[2]
+
+
+def test_quadratic_grad_matches_autodiff():
+    key = jax.random.PRNGKey(2)
+    cobjs = obj.make_quadratic(key, 3, 8, 5.0)
+    cp = jax.tree_util.tree_map(lambda a: a[1], cobjs)
+    x = jax.random.uniform(jax.random.fold_in(key, 1), (8,))
+    g1 = obj.quadratic_grad(cp, x)
+    g2 = jax.grad(lambda x: obj.quadratic_value(cp, x))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-6)
+
+
+def test_attack_objective_end_to_end():
+    key = jax.random.PRNGKey(3)
+    cobjs, img = mobj.make_attack_objective(key, n_clients=4, p_shared=0.6,
+                                            side=8, train_per_client=128)
+    d = img.shape[-1]
+    x0 = jnp.full((d,), 0.5)  # zero perturbation
+    # unperturbed: the target is correctly classified by construction
+    margin0 = float(mobj.attack_global_value(cobjs, x0))
+    assert margin0 > 0
+    assert float(mobj.attack_success(cobjs, x0)) == 0.0
+    # the margin is queryable and noisy
+    cp = jax.tree_util.tree_map(lambda a: a[0], cobjs)
+    y1 = mobj.attack_query(cp, x0, jax.random.PRNGKey(0))
+    y2 = mobj.attack_query(cp, x0, jax.random.PRNGKey(1))
+    assert float(jnp.abs(y1 - y2)) > 0
+    # a large adversarial-ish perturbation changes the margin
+    xr = jax.random.uniform(jax.random.fold_in(key, 9), (d,))
+    assert float(mobj.attack_global_value(cobjs, xr)) != pytest.approx(margin0, abs=1e-6)
+
+
+def test_metric_objective_end_to_end():
+    key = jax.random.PRNGKey(4)
+    cobjs, d = mobj.make_metric_objective(key, n_clients=3, p_shared=0.8, n_eval=128)
+    x0 = jnp.full((d,), 0.5)  # zero perturbation -> theta*
+    v0 = float(mobj.metric_global_value(cobjs, x0))
+    assert 0.0 <= v0 <= 1.0
+    # theta* is trained: its precision should beat a heavy random perturbation
+    xr = jnp.zeros((d,))  # extreme corner = large perturbation
+    vr = float(mobj.metric_global_value(cobjs, xr))
+    assert v0 < vr + 0.05
+
+
+def test_lm_objective_runs_on_zoo_archs():
+    from repro.configs import get_config
+    from repro.models.model import init_train_state
+
+    for arch in ("qwen1_5_0_5b", "mamba2_370m"):
+        cfg = get_config(arch, "smoke")
+        key = jax.random.PRNGKey(0)
+        params, _ = init_train_state(key, cfg)
+        cobjs = mobj.make_lm_objective(key, cfg, n_clients=3, batch=1, seq=16)
+        query, global_value, d, value = mobj.make_lm_query(cfg, params)
+        assert d == cfg.d_model
+        x0 = jnp.full((d,), 0.5)
+        v = float(global_value(cobjs, x0))
+        assert np.isfinite(v) and v > 0
+        cp = jax.tree_util.tree_map(lambda a: a[0], cobjs)
+        y = float(query(cp, x0, jax.random.PRNGKey(1)))
+        assert np.isfinite(y)
+        # perturbing the norm gains changes the loss
+        x1 = jnp.clip(x0 + 0.4, 0, 1)
+        assert float(global_value(cobjs, x1)) != pytest.approx(v, abs=1e-7)

@@ -1,0 +1,95 @@
+"""RFF approximation tests (paper Sec. 4.2.1, Appx. B, Lemma C.3/C.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gp_surrogate as gp
+from repro.core import rff as rfflib
+
+
+def test_rff_approximates_se_kernel():
+    key = jax.random.PRNGKey(0)
+    d, l = 5, 0.8
+    params = rfflib.make_rff(key, 4096, d, l)
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (20, d))
+    k_true = gp.sqexp(xs, xs, l)
+    k_approx = rfflib.approx_kernel(params, xs, xs)
+    assert float(jnp.abs(k_true - k_approx).max()) < 0.08
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rff_error_decreases_with_m(seed):
+    """Lemma C.3: |phi phi' - k| = O(1/sqrt(M)) -- 16x features should cut the
+    error decisively (allow slack for randomness)."""
+    key = jax.random.PRNGKey(seed)
+    d, l = 4, 1.0
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (16, d))
+    k_true = gp.sqexp(xs, xs, l)
+
+    def err(m, salt):
+        p = rfflib.make_rff(jax.random.fold_in(key, salt), m, d, l)
+        return float(jnp.sqrt(jnp.mean((rfflib.approx_kernel(p, xs, xs) - k_true) ** 2)))
+
+    e_small = np.mean([err(64, s) for s in range(3)])
+    e_big = np.mean([err(1024, s + 10) for s in range(3)])
+    assert e_big < e_small
+
+
+def test_grad_features_matches_autodiff():
+    key = jax.random.PRNGKey(2)
+    d, m = 6, 256
+    params = rfflib.make_rff(key, m, d, 0.9)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m,))
+    x = jax.random.uniform(jax.random.fold_in(key, 2), (d,))
+    g1 = rfflib.grad_features_t_w(params, x, w)
+    g2 = jax.grad(lambda x: rfflib.features(params, x[None, :])[0] @ w)(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+    g3 = rfflib.grad_features_t_w_batch(params, x[None, :], w)[0]
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g3), atol=1e-6)
+
+
+def test_fit_w_padding_invariance():
+    key = jax.random.PRNGKey(3)
+    d, m, n = 3, 128, 12
+    params = rfflib.make_rff(key, m, d, 0.8)
+    hyper = gp.default_hyper(0.8, 1e-4)
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (n, d))
+    ys = jnp.sin(xs.sum(-1))
+    t1 = gp.traj_append_batch(gp.traj_init(n, d), xs, ys)
+    t2 = gp.traj_append_batch(gp.traj_init(n + 30, d), xs, ys)
+    w1 = rfflib.fit_w(params, t1, hyper)
+    w2 = rfflib.fit_w(params, t2, hyper)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=2e-4)
+
+
+def test_rff_surrogate_gradient_tracks_gp_gradient():
+    """grad_muhat (RFF) should approximate grad_mu (exact GP) -- Lemma C.4."""
+    key = jax.random.PRNGKey(4)
+    d, l = 4, 0.7
+    f = lambda x: jnp.sum(x**2) - jnp.sum(jnp.sin(x))
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (60, d))
+    ys = jax.vmap(f)(xs)
+    traj = gp.traj_append_batch(gp.traj_init(64, d), xs, ys)
+    hyper = gp.default_hyper(l, 1e-4)
+    params = rfflib.make_rff(key, 4096, d, l)
+    w = rfflib.fit_w(params, traj, hyper)
+    xq = jnp.full((d,), 0.45)
+    g_gp = gp.grad_mean(traj, hyper, xq)
+    g_rff = rfflib.grad_features_t_w(params, xq, w)
+    assert float(jnp.linalg.norm(g_gp - g_rff)) < 0.3 * float(jnp.linalg.norm(g_gp)) + 0.1
+
+
+def test_server_aggregation_is_linear():
+    """w_global = mean(w_i) -> global surrogate = mean of local surrogates
+    (eq. 7): exact linearity, no approximation."""
+    key = jax.random.PRNGKey(5)
+    d, m, n_clients = 3, 64, 4
+    params = rfflib.make_rff(key, m, d, 1.0)
+    ws = jax.random.normal(jax.random.fold_in(key, 1), (n_clients, m))
+    xq = jax.random.uniform(jax.random.fold_in(key, 2), (d,))
+    per_client = jnp.stack([rfflib.grad_features_t_w(params, xq, w) for w in ws])
+    agg = rfflib.grad_features_t_w(params, xq, ws.mean(0))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(per_client.mean(0)), atol=1e-6)
