@@ -1,7 +1,11 @@
 """Benchmark harness entry point (deliverable d).
 
 One module per paper table/figure + the roofline table + kernel microbench.
-Prints ``name,us_per_call,derived`` CSV per row.
+Prints ``name,us_per_call,derived`` CSV per row.  Modules that expose a
+``json_payload()`` hook additionally get their metrics serialized to
+``BENCH_<name>.json`` next to this file, so the perf trajectory (e.g. the
+surrogate-step speedup and factor_refactor_rate from the kernels module) is
+machine-readable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
     REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
@@ -11,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV per row.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -48,6 +53,12 @@ def main() -> None:
             rows = mod.run(quick=quick)
             for row in rows:
                 print(row.csv(), flush=True)
+            payload = getattr(mod, "json_payload", lambda: None)()
+            if payload:
+                path = os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"# {name}: wrote {path}", flush=True)
             print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures += 1

@@ -67,6 +67,16 @@ class AlgoConfig:
     active_candidates: int = 100
     active_radius: float = 0.01
     active_round_end: int = 5
+    # Per-step surrogate hot path: carry an incrementally maintained Gram
+    # factorization in ClientState (DESIGN.md Sec. 2) instead of
+    # refactorizing at every surrogate evaluation.  False = the seed's
+    # eigh-from-scratch path, kept as the equivalence oracle for tests.
+    use_factor_cache: bool = True
+    # Round-end RFF fit: solve through the exact-GP cached factor (one
+    # O(cap^2) solve) instead of eigh-refactorizing the RFF Gram.  Off by
+    # default: the RFF-Gram solve is the paper's eq. 6 and changing it
+    # perturbs w by the O(1/sqrt(M)) feature-approximation error.
+    rff_fit_exact: bool = False
     # domain
     lo: float = 0.0
     hi: float = 1.0
@@ -74,6 +84,9 @@ class AlgoConfig:
     def __post_init__(self):
         if self.name not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.name!r}; choose from {ALGORITHMS}")
+        if self.rff_fit_exact and not self.use_factor_cache:
+            raise ValueError("rff_fit_exact=True requires use_factor_cache=True "
+                             "(the round-end fit consumes the cached Gram factor)")
 
     @property
     def is_fzoos(self) -> bool:
@@ -105,6 +118,7 @@ class AlgoConfig:
 class ClientState(NamedTuple):
     x: jax.Array  # (d,)
     traj: gp.Trajectory  # ring buffer (fzoos; 1-slot dummy otherwise)
+    factor: gp.GramFactor  # cached Gram factorization of `traj` (DESIGN.md Sec. 2)
     w_local: jax.Array  # (M,) RFF weights of own surrogate at end of prev round
     w_global: jax.Array  # (M,) server-averaged weights
     c_local: jax.Array  # (d,) SCAFFOLD control variate
@@ -121,6 +135,11 @@ class RoundStats(NamedTuple):
     mean_cos: jax.Array  # () mean cos(ghat, grad F) over clients x iters (diag)
     mean_disparity: jax.Array  # () mean ||ghat - grad F||^2 (Thm. 1 Xi)
     queries_per_client: jax.Array  # () mean cumulative queries
+    refactor_rate: jax.Array  # () mean clamped-eigh fallbacks / factor updates
+
+
+def _hyper_of(cfg: AlgoConfig) -> gp.GPHyper:
+    return gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
 
 
 def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientState:
@@ -131,9 +150,11 @@ def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientS
     # The shared direction bank must be identical across clients (Prop. D.4):
     # derive it from a constant key, not the per-client key.
     bank = fdlib.sample_directions(jax.random.PRNGKey(12345), qd, cfg.dim)
+    traj0 = gp.traj_init(cap, cfg.dim)
     return ClientState(
         x=x0,
-        traj=gp.traj_init(cap, cfg.dim),
+        traj=traj0,
+        factor=gp.factor_init(traj0, _hyper_of(cfg)),
         w_local=jnp.zeros((m,), jnp.float32),
         w_global=jnp.zeros((m,), jnp.float32),
         c_local=jnp.zeros((cfg.dim,), jnp.float32),
@@ -170,8 +191,11 @@ def _estimate_gradient(
     """ghat^(i)_{r,t-1} per eq. (2)/(8).  Returns (ghat, state-with-queries)."""
     x = st.x
     if cfg.is_fzoos:
-        hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
-        g_loc = gp.grad_mean(st.traj, hyper, x)
+        hyper = _hyper_of(cfg)
+        if cfg.use_factor_cache:
+            g_loc = gp.grad_mean_cached(st.traj, st.factor, hyper, x)
+        else:
+            g_loc = gp.grad_mean(st.traj, hyper, x)
         corr = rfflib.grad_features_t_w(rff, x, st.w_global) - rfflib.grad_features_t_w(rff, x, st.w_local)
         if cfg.gamma_mode == "inv_t":
             gamma = 1.0 / t.astype(jnp.float32)  # Cor. C.1 practical choice
@@ -215,20 +239,34 @@ def _local_phase(
         if cfg.is_fzoos:
             # Trajectory-informed: query the current iterate (+ active queries)
             # BEFORE estimating -- the estimate is conditioned on D_{r,t-1}.
+            hyper = _hyper_of(cfg)
             y = query_fn(cobj, st.x, k_obs)
-            traj = gp.traj_append(st.traj, st.x, y)
+            if cfg.use_factor_cache:
+                traj, factor = gp.traj_extend(
+                    st.traj, st.factor, st.x[None, :], y[None], hyper
+                )
+            else:
+                traj, factor = gp.traj_append(st.traj, st.x, y), st.factor
             n_q = 1
             if cfg.active_per_iter > 0:
-                hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
-                cands = gp.select_active_queries(
-                    k_act, traj, hyper, st.x, cfg.active_candidates, cfg.active_per_iter,
-                    cfg.active_radius, cfg.lo, cfg.hi,
-                )
+                if cfg.use_factor_cache:
+                    cands = gp.select_active_queries_cached(
+                        k_act, traj, factor, hyper, st.x, cfg.active_candidates,
+                        cfg.active_per_iter, cfg.active_radius, cfg.lo, cfg.hi,
+                    )
+                else:
+                    cands = gp.select_active_queries(
+                        k_act, traj, hyper, st.x, cfg.active_candidates, cfg.active_per_iter,
+                        cfg.active_radius, cfg.lo, cfg.hi,
+                    )
                 kq = jax.random.split(jax.random.fold_in(k_act, 1), cfg.active_per_iter)
                 ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
-                traj = gp.traj_append_batch(traj, cands, ys)
+                if cfg.use_factor_cache:
+                    traj, factor = gp.traj_extend(traj, factor, cands, ys, hyper)
+                else:
+                    traj = gp.traj_append_batch(traj, cands, ys)
                 n_q += cfg.active_per_iter
-            st = st._replace(traj=traj, queries=st.queries + n_q)
+            st = st._replace(traj=traj, factor=factor, queries=st.queries + n_q)
 
         ghat, st = _estimate_gradient(cfg, rff, query_fn, cobj, st, server_x, t, k_est)
         new_x, new_opt = opt_update(st.opt, ghat, st.x, cfg.eta)
@@ -299,21 +337,34 @@ def run_round(
         if cfg.is_fzoos:
             key, k_act = jax.random.split(st.key)
             st = st._replace(key=key)
-            traj = st.traj
+            traj, factor = st.traj, st.factor
+            hyper = _hyper_of(cfg)
             if cfg.active_round_end > 0:
                 # Active queries around x_r (line 7 of Algo. 2) sharpen the
                 # correction term (2) in Thm. 1 before w is fitted & shipped.
-                hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
-                cands = gp.select_active_queries(
-                    k_act, traj, hyper, new_server_x, cfg.active_candidates,
-                    cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
-                )
+                if cfg.use_factor_cache:
+                    cands = gp.select_active_queries_cached(
+                        k_act, traj, factor, hyper, new_server_x, cfg.active_candidates,
+                        cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
+                    )
+                else:
+                    cands = gp.select_active_queries(
+                        k_act, traj, hyper, new_server_x, cfg.active_candidates,
+                        cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
+                    )
                 kq = jax.random.split(jax.random.fold_in(k_act, 2), cfg.active_round_end)
                 ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
-                traj = gp.traj_append_batch(traj, cands, ys)
-                st = st._replace(traj=traj, queries=st.queries + cfg.active_round_end)
-            hyper = gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
-            w_i = rfflib.fit_w(rff, traj, hyper)
+                if cfg.use_factor_cache:
+                    traj, factor = gp.traj_extend(traj, factor, cands, ys, hyper)
+                else:
+                    traj = gp.traj_append_batch(traj, cands, ys)
+                st = st._replace(
+                    traj=traj, factor=factor, queries=st.queries + cfg.active_round_end
+                )
+            if cfg.rff_fit_exact and cfg.use_factor_cache:
+                w_i = rfflib.fit_w_from_factor(rff, traj, factor)
+            else:
+                w_i = rfflib.fit_w(rff, traj, hyper)
             st = st._replace(w_local=w_i)
         elif cfg.name == "scaffold2":
             st = st._replace(c_local=st.fd_accum / cfg.local_steps)
@@ -335,6 +386,10 @@ def run_round(
         mean_cos=mean_fn(sum_cos) / cfg.local_steps,
         mean_disparity=mean_fn(sum_disp) / cfg.local_steps,
         queries_per_client=mean_fn(states.queries.astype(jnp.float32)),
+        refactor_rate=mean_fn(
+            states.factor.n_refactors.astype(jnp.float32)
+            / jnp.maximum(states.factor.n_updates.astype(jnp.float32), 1.0)
+        ),
     )
     del denom
     return states, stats

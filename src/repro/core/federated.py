@@ -15,6 +15,14 @@ one round makes the paper's communication-efficiency claim *inspectable*:
 the all-reduce payload is ``d + M`` floats per round for FZooS vs ``d`` (plus
 control variates) for the baselines, and the dry-run (launch/dryrun.py)
 accounts those bytes in the roofline's collective term.
+
+The per-client Gram-factor cache (``gp_surrogate.GramFactor``, three
+(cap, cap) buffers riding in ``ClientState``) is DEVICE-LOCAL state: it
+shards over the client axes with the rest of the state pytree and never
+enters a collective -- ``shard_clients``/``distributed_round_fn`` treat it
+like the trajectory ring buffer it summarizes.  At the default cap=128 that
+is ~0.2 MB per client, so thousands of clients per device fit in HBM before
+the trajectory itself becomes the constraint.
 """
 
 from __future__ import annotations

@@ -88,6 +88,25 @@ def fit_w(params: RFFParams, traj: Trajectory, hyper: GPHyper) -> jax.Array:
     return phi.T @ alpha
 
 
+def fit_w_from_factor(params: RFFParams, traj: Trajectory, factor) -> jax.Array:
+    """w = Phi (K + s^2 I)^{-1} y through the cached EXACT-GP Gram factor.
+
+    The paper's eq. 6 solves against the RFF-approximated Gram
+    ``Khat = Phi^T Phi``; this variant reuses the per-client ``GramFactor``
+    (core/gp_surrogate) already maintained for the surrogate hot path, so the
+    round-end fit is one O(cap^2) cached solve instead of an O(cap^3) eigh of
+    Khat.  Because Khat = K + O(1/sqrt(M)), the fitted w differs from eq. 6
+    by the same feature-approximation error the method already tolerates;
+    the executable default keeps eq. 6 (``AlgoConfig.rff_fit_exact`` opts in).
+    """
+    from repro.core import gp_surrogate as gp
+
+    mask = traj.valid_mask()
+    alpha = gp.factor_solve(factor, traj.ys * mask)
+    phi = features(params, traj.xs) * mask[:, None]
+    return phi.T @ alpha
+
+
 def approx_kernel(params: RFFParams, x1: jax.Array, x2: jax.Array) -> jax.Array:
     """phi(X1) phi(X2)^T -- used by tests for the O(1/sqrt(M)) error law."""
     return features(params, x1) @ features(params, x2).T

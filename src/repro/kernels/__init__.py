@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the FZooS surrogate hot paths, each with a pure-jnp
+# oracle in ref.py and a padding/backend wrapper in ops.py (see DESIGN.md
+# Sec. 3):
+#
+#   sqexp        - fused SE Gram tiles (trajectory kernel matrix)
+#   rff_features - phi(X) feature map (eq. 6)
+#   rff_grad     - grad phi(X)^T w contraction (eq. 8)
+#   gp_score     - fused active-query uncertainty scoring vs the cached
+#                  Gram-factor inverse (ISSUE 1 tentpole)
+#   gp_grad      - fused batched derived-GP gradient mean (eq. 5)
+#
+# Import kernels via repro.kernels.ops; the kernel modules themselves are
+# implementation detail.

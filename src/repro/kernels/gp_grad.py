@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused batched derived-GP gradient mean (eq. 5).
+
+For a block of query points C the posterior gradient mean under the SE
+kernel is
+
+    grad_mu(c) = (1/l^2) [ (h o alpha) @ X - (h . alpha) c ],   h_t = k(c, x_t)
+
+where alpha = (K + s^2 I)^{-1} y comes from the cached Gram factor
+(core/gp_surrogate ``GramFactor``) with the validity mask already folded in
+(masked solves leave invalid slots exactly zero).  The kernel fuses the
+kernel-vector generation with both contractions, so neither the (bn, cap)
+h-tile nor the explicit (cap, d) dkdx Jacobian ever materializes in HBM --
+the seed path built J per query point.
+
+Grid: (n / block_n,); xs and alpha stay resident across programs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, x_ref, a_ref, o_ref, *, inv_two_l2: float, inv_l2: float):
+    c = c_ref[...]  # (bn, d)
+    x = x_ref[...]  # (cap, d)
+    n1 = jnp.sum(c * c, axis=-1, keepdims=True)  # (bn, 1)
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True).T  # (1, cap)
+    cross = jax.lax.dot_general(
+        c, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
+    w = jnp.exp(-d2 * inv_two_l2) * a_ref[...]  # (bn, cap), alpha row-broadcast
+    acc = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bn, d)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[...] = ((acc - s * c) * inv_l2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lengthscale", "block_n", "interpret"))
+def grad_mean_kernel(
+    cands: jax.Array,
+    xs: jax.Array,
+    alpha: jax.Array,  # (1, cap) -- row vector for TPU-friendly layout
+    *,
+    lengthscale: float,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = cands.shape
+    cap = xs.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    assert alpha.shape == (1, cap), alpha.shape
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), cands.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((cap, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, cap), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        interpret=interpret,
+    )(cands, xs, alpha)

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.gp_grad import grad_mean_kernel
+from repro.kernels.gp_score import uncertainty_scores_kernel
 from repro.kernels.rff_features import rff_features_kernel
 from repro.kernels.rff_grad import rff_grad_kernel
 from repro.kernels.sqexp import sqexp_kernel
@@ -21,6 +23,20 @@ from repro.kernels.sqexp import sqexp_kernel
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _static_float(x) -> float | None:
+    """Concrete python float, or None for a traced value.
+
+    The Pallas kernels bake scalars (lengthscale, prior) into the program as
+    compile-time constants; when a caller threads TRACED hyperparameters
+    (e.g. the federated round loop jits over GPHyper arrays) the wrappers
+    fall back to the jnp oracle, which XLA fuses well on every backend.
+    """
+    try:
+        return float(x)
+    except (TypeError, jax.errors.TracerArrayConversionError, jax.errors.ConcretizationTypeError):
+        return None
 
 
 def _round_up(x: int, m: int) -> int:
@@ -102,3 +118,62 @@ def sqexp(
         interpret=not _on_tpu(),
     )
     return out[:n, :m]
+
+
+def uncertainty_scores(
+    cands: jax.Array,
+    xs: jax.Array,
+    binv: jax.Array,
+    pmat: jax.Array,
+    *,
+    lengthscale,
+    prior,
+    block_n: int = 128,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Fused active-query uncertainty scores: (n,d) candidates -> (n,).
+
+    ``binv`` is the masked Gram inverse and ``pmat = binv o XX^T``; see
+    ref.uncertainty_scores for the algebra.  Padded candidate rows (zeros)
+    produce junk scores that are sliced away before returning; the resident
+    trajectory/Gram inputs are never padded (cap is the compile-time ring
+    capacity).  Traced lengthscale/prior fall back to the jnp oracle.
+    """
+    ls, pr = _static_float(lengthscale), _static_float(prior)
+    if not (_on_tpu() or force_pallas) or ls is None or pr is None:
+        return ref.uncertainty_scores(cands, xs, binv, pmat, lengthscale, prior)
+    n = cands.shape[0]
+    npad = _round_up(n, block_n)
+    out = uncertainty_scores_kernel(
+        _pad_rows(cands, npad), xs, binv, pmat,
+        lengthscale=ls, prior=pr, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:n]
+
+
+def grad_mean_batch(
+    cands: jax.Array,
+    xs: jax.Array,
+    alpha: jax.Array,
+    *,
+    lengthscale,
+    block_n: int = 128,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Fused batched derived-GP gradient mean: (n,d) queries -> (n,d).
+
+    ``alpha`` (cap,) must already carry the validity mask (masked solves
+    leave invalid slots exactly zero, so padded trajectory slots contribute
+    nothing).  Padded candidate rows are sliced away before returning.
+    Traced lengthscale falls back to the jnp oracle.
+    """
+    ls = _static_float(lengthscale)
+    if not (_on_tpu() or force_pallas) or ls is None:
+        return ref.grad_mean_batch(cands, xs, alpha, lengthscale)
+    n = cands.shape[0]
+    npad = _round_up(n, block_n)
+    out = grad_mean_kernel(
+        _pad_rows(cands, npad), xs, alpha[None, :],
+        lengthscale=ls, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:n, :]

@@ -85,3 +85,153 @@ def test_kernels_match_core_math():
         np.asarray(gp.sqexp(xs, xs, 0.9)),
         atol=2e-6,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused GP-surrogate kernels (gp_score / gp_grad)
+# ---------------------------------------------------------------------------
+
+GP_SHAPES = [
+    (4, 3, 16),       # all-padding path (n < block)
+    (64, 8, 64),      # block-aligned candidates
+    (100, 20, 128),   # the paper's active-query shape (n_cand=100, cap=128)
+    (130, 5, 96),     # misaligned candidate count
+]
+
+
+def _gp_data(n, d, cap, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cands = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (cap, d))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (cap, cap)) / np.sqrt(cap)
+    binv = a @ a.T + 0.1 * jnp.eye(cap)  # any SPD stand-in for the Gram inverse
+    pmat = binv * (xs @ xs.T)
+    alpha = jax.random.normal(jax.random.fold_in(key, 3), (cap,))
+    return cands, xs, binv, pmat, alpha
+
+
+@pytest.mark.parametrize("n,d,cap", GP_SHAPES)
+def test_uncertainty_scores_kernel(n, d, cap):
+    cands, xs, binv, pmat, _ = _gp_data(n, d, cap)
+    got = ops.uncertainty_scores(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=64, force_pallas=True,
+    )
+    want = ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, d / 0.64)
+    assert got.shape == want.shape == (n,)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5)
+
+
+@pytest.mark.parametrize("n,d,cap", GP_SHAPES)
+def test_grad_mean_kernel(n, d, cap):
+    cands, xs, _, _, alpha = _gp_data(n, d, cap)
+    got = ops.grad_mean_batch(
+        cands, xs, alpha, lengthscale=0.8, block_n=64, force_pallas=True
+    )
+    want = ref.grad_mean_batch(cands, xs, alpha, 0.8)
+    assert got.shape == want.shape == (n, d)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5)
+
+
+def test_gp_kernels_match_surrogate_math():
+    """ops fast paths == the first-principles gp_surrogate oracle."""
+    from repro.core import gp_surrogate as gp
+
+    cap, d = 48, 6
+    key = jax.random.PRNGKey(4)
+    hyper = gp.default_hyper(0.7, 1e-4)
+    traj = gp.traj_init(cap, d)
+    factor = gp.factor_init(traj, hyper)
+    for i in range(10):
+        xs = jax.random.uniform(jax.random.fold_in(key, i), (4, d))
+        traj, factor = gp.traj_extend(traj, factor, xs, jnp.sin(xs.sum(-1)), hyper)
+    xq = jax.random.uniform(jax.random.fold_in(key, 99), (9, d))
+
+    u_direct = gp.grad_uncertainty_batch(traj, hyper, xq)
+    u_fast = gp.grad_uncertainty_batch_cached(traj, factor, hyper, xq)
+    np.testing.assert_allclose(np.asarray(u_fast), np.asarray(u_direct), atol=2e-3)
+
+    alpha = gp.gp_alpha_cached(traj, factor, hyper)
+    g_direct = jax.vmap(lambda x: gp.grad_mean_cached(traj, factor, hyper, x))(xq)
+    g_fast = ops.grad_mean_batch(xq, traj.xs, alpha, lengthscale=0.7)
+    np.testing.assert_allclose(np.asarray(g_fast), np.asarray(g_direct), atol=1e-5)
+
+
+def test_gp_kernels_traced_hyper_fall_back_to_oracle():
+    """Traced lengthscale (e.g. inside the jitted round loop) must not
+    attempt to bake a tracer into the Pallas program."""
+    cands, xs, binv, pmat, alpha = _gp_data(16, 4, 32)
+
+    @jax.jit
+    def scores(ls):
+        return ops.uncertainty_scores(
+            cands, xs, binv, pmat, lengthscale=ls, prior=4.0 / ls**2,
+            force_pallas=True,
+        )
+
+    got = scores(jnp.asarray(0.8))
+    want = ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, 4.0 / 0.64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops padding paths: zero-row padding invariants (see ops.py docstrings)
+# ---------------------------------------------------------------------------
+
+ODD_SHAPES = [
+    (1, 1, 1),        # degenerate: everything padded
+    (5, 3, 17),       # tiny odd
+    (129, 7, 257),    # one past a block boundary on both axes
+    (63, 2189, 999),  # one short of a block boundary, paper-sized d
+]
+
+
+@pytest.mark.parametrize("n,d,m", ODD_SHAPES)
+def test_padding_invariance_rff_features(n, d, m):
+    x, v, b, _ = _data(n, d, m, jnp.float32, seed=3)
+    got = ops.rff_features(x, v, b, force_pallas=True)  # default 128/256 blocks
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.rff_features(x, v, b)), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("n,d,m", ODD_SHAPES)
+def test_padding_invariance_rff_grad(n, d, m):
+    """Padded feature slots carry v == 0 AND w == 0: exactly zero
+    contribution, so the sliced result equals the unpadded oracle."""
+    x, v, b, w = _data(n, d, m, jnp.float32, seed=4)
+    got = ops.rff_grad(x, v, b, w, force_pallas=True)
+    want = ref.rff_grad(x, v, b, w)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5
+    )
+    # The invariant itself, at the kernel level: zero-padded feature slots
+    # (v == 0 AND w == 0) contribute nothing PROVIDED n_features still names
+    # the live count -- the sqrt(2/M) normalization is part of phi's
+    # definition, so padding without pinning n_features is NOT a no-op.
+    from repro.kernels.rff_grad import rff_grad_kernel
+
+    pad = 128 - (m % 128) if m % 128 else 128
+    npad = 64 - (n % 64) if n % 64 else 0
+    got_k = rff_grad_kernel(
+        jnp.pad(x, ((0, npad), (0, 0))), jnp.pad(v, ((0, pad), (0, 0))),
+        jnp.pad(b, (0, pad)), jnp.pad(w, (0, pad)),
+        n_features=m, block_n=64, block_m=128, interpret=True,
+    )[:n]
+    np.testing.assert_allclose(
+        np.asarray(got_k) / scale, np.asarray(want) / scale, atol=5e-5
+    )
+
+
+@pytest.mark.parametrize("n,d,m", ODD_SHAPES)
+def test_padding_invariance_sqexp(n, d, m):
+    """Padded rows produce exp(-||x||^2/2l^2) junk INSIDE the kernel; the
+    wrapper must slice it away (padding is zeros, never NaN)."""
+    x, v, _, _ = _data(n, d, m, jnp.float32, seed=5)
+    got = ops.sqexp(x, v, 0.9, force_pallas=True)
+    assert got.shape == (n, m)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.sqexp(x, v, 0.9)), atol=2e-6)

