@@ -1,0 +1,152 @@
+"""Round-driver benchmark: the seed one-dispatch-per-round Python loop vs
+the chunked on-device scan engine (core/rounds.py, ISSUE 2 tentpole).
+
+The kernels benchmark covers the surrogate math; this one isolates the
+DRIVER overhead the scan engine removes -- per-round jit dispatch plus the
+host-roundtrip eval of the un-jitted ``global_value_fn`` (an eager vmap
+that re-traces every round).  Two regimes at N in {8, 64} clients:
+
+  * ``fedzo`` -- the query-parsimonious many-cheap-rounds regime the round
+    engine exists for (FedZeN-style): per-round compute is tiny, so the
+    driver tax IS the round time and the scan engine's win is largest;
+  * ``fzoos`` -- the surrogate method's fuller per-round compute, showing
+    how the win shrinks as on-device work grows (the overhead pipelines
+    under compute once rounds are a few ms).
+
+Each driver is reduced to its steady-state inner loop around ONE pre-warmed
+executable (the per-round jit for the seed loop, the donated chunk step for
+the scan engine), so compile time and jit-cache misses stay out of the
+measurement; wall time per round is best-of-``REPEATS`` over a fixed span.
+
+Dispatches/round counts host->device program launches issued by Python:
+the seed loop pays 1 jitted round call + 1 eager global-value eval per
+round; the scan engine pays 1 chunk call per ``chunk`` rounds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import algorithms as alg
+from repro.core import objectives as obj
+from repro.core import rff as rfflib
+from repro.core import rounds as rounds_mod
+
+#: filled by run(); run.py serializes it to BENCH_rounds.json.  The driver
+#: configs are fixed regardless of quick/full mode so the file stays
+#: comparable across PRs; only the measured round span changes.
+_JSON_PAYLOAD: dict = {}
+
+CHUNK = 8
+DIM = 4
+REPEATS = 3
+_ALGOS = {
+    # dispatch-bound: 1 local step, 3 queries/round -- the cheap-round regime
+    "fedzo": dict(local_steps=1, q=2, fd_lambda=5e-3),
+    # surrogate compute: Gram cap 8, M=16 RFF fit, 1 round-end active query
+    "fzoos": dict(local_steps=1, n_features=16, traj_capacity=8,
+                  active_per_iter=0, active_candidates=8, active_round_end=1),
+}
+
+
+def json_payload() -> dict:
+    return _JSON_PAYLOAD
+
+
+def _bench_one(algo: str, n_clients: int, rounds: int) -> dict:
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, n_clients, DIM, 5.0, 0.001)
+    cfg = alg.AlgoConfig(name=algo, dim=DIM, n_clients=n_clients,
+                         lengthscale=0.5, noise=1e-5, **_ALGOS[algo])
+    x0 = jnp.full((DIM,), 0.5, jnp.float32)
+    rff = None
+    if cfg.is_fzoos:
+        rff = rfflib.make_rff(jax.random.PRNGKey(1), cfg.n_features, DIM,
+                              cfg.lengthscale)
+    query, gval = obj.quadratic_query, obj.quadratic_global_value
+    mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
+
+    def fresh_states():
+        return alg.init_states(cfg, jax.random.PRNGKey(2), x0)
+
+    # -- seed driver inner loop: one jitted round + one eager F eval per round
+    round_jit = jax.jit(
+        lambda s, sx: alg.run_round(cfg, rff, query, cobjs, s, sx, mean_fn, None)
+    )
+    jax.block_until_ready(round_jit(fresh_states(), x0)[1].server_x)  # compile
+
+    def time_old() -> float:
+        states, sx = fresh_states(), x0
+        jax.block_until_ready(states.x)
+        fvals = [gval(cobjs, sx)]
+        t0 = time.time()
+        for _ in range(rounds):
+            states, stats = round_jit(states, sx)
+            sx = stats.server_x
+            fvals.append(gval(cobjs, sx))
+        jax.block_until_ready((sx, fvals))
+        return time.time() - t0
+
+    # -- scan engine inner loop: one donated chunk step per CHUNK rounds
+    step = rounds_mod.make_chunk_step(
+        rounds_mod.sim_chunk_fn(cfg, rff, query, gval, None, CHUNK)
+    )
+
+    def fresh_run_state():
+        hist = rounds_mod.history_init(rounds, x0, gval(cobjs, x0))
+        return fresh_states(), hist
+
+    s_w, h_w = fresh_run_state()
+    jax.block_until_ready(step(s_w, h_w, cobjs, x0, jnp.int32(0))[2])  # compile
+
+    def time_new() -> float:
+        states, hist = fresh_run_state()
+        jax.block_until_ready((states.x, hist.xs))
+        sx = x0
+        t0 = time.time()
+        for off in range(0, rounds, CHUNK):
+            states, hist, sx = step(states, hist, cobjs, sx, jnp.int32(off))
+        jax.block_until_ready(hist.xs)
+        return time.time() - t0
+
+    old_pr = min(time_old() for _ in range(REPEATS)) / rounds
+    new_pr = min(time_new() for _ in range(REPEATS)) / rounds
+    return {
+        "algo": algo,
+        "n_clients": n_clients,
+        "old_ms_per_round": old_pr * 1e3,
+        "new_ms_per_round": new_pr * 1e3,
+        "old_rounds_per_sec": 1.0 / old_pr,
+        "new_rounds_per_sec": 1.0 / new_pr,
+        "speedup": old_pr / new_pr,
+        "old_dispatches_per_round": 2.0,
+        "new_dispatches_per_round": 1.0 / CHUNK,
+        "rounds_measured": rounds,
+    }
+
+
+def run(quick: bool) -> list[Row]:
+    rounds = 4 * CHUNK if quick else 12 * CHUNK
+    rows = []
+    _JSON_PAYLOAD.clear()
+    _JSON_PAYLOAD.update(
+        {"chunk": CHUNK, "dim": DIM, "configs": {k: dict(v) for k, v in _ALGOS.items()},
+         "quick": bool(quick)}
+    )
+    for algo in _ALGOS:
+        for n in (8, 64):
+            m = _bench_one(algo, n, rounds)
+            _JSON_PAYLOAD[f"{algo}_n{n}"] = m
+            for drv in ("old", "new"):
+                rows.append(Row(
+                    name=f"round_driver_{algo}_{drv}_n{n}",
+                    us_per_call=m[f"{drv}_ms_per_round"] * 1e3,
+                    derived=(f"rounds_per_sec={m[f'{drv}_rounds_per_sec']:.1f};"
+                             f"dispatches_per_round={m[f'{drv}_dispatches_per_round']:g}"
+                             + (f";speedup={m['speedup']:.2f}x" if drv == "new" else "")),
+                ))
+    return rows

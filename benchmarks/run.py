@@ -30,6 +30,7 @@ MODULES = {
     "fig6": "benchmarks.fig6_features",
     "thm1": "benchmarks.thm1_rates",
     "kernels": "benchmarks.kernels_bench",
+    "rounds": "benchmarks.rounds_bench",
     "roofline": "benchmarks.roofline",
 }
 

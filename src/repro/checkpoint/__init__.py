@@ -1,7 +1,9 @@
 from repro.checkpoint.io import (  # noqa: F401
     latest_step,
     restore,
+    restore_round_state,
     restore_train_state,
     save,
+    save_round_state,
     save_train_state,
 )

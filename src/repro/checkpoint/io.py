@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import shutil
 from typing import Any
 
 import jax
@@ -35,23 +36,33 @@ def _from_numpy(arr: np.ndarray, tag: str):
 
 
 def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None = None) -> str:
+    """Atomic-ish save: write into a ``.tmp`` sibling, then rename into
+    place.  A preemption mid-write leaves only a ``*.tmp`` directory, which
+    ``latest_step`` never matches, so resume falls back to the last COMPLETE
+    checkpoint instead of dying on a truncated one."""
     if step is not None:
         path = os.path.join(path, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     arrays, tags = {}, []
     for i, leaf in enumerate(leaves):
         arr, tag = _to_numpy(leaf)
         arrays[f"leaf_{i}"] = arr
         tags.append(tag)
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     meta = {"treedef": str(treedef), "n_leaves": len(leaves), "dtypes": tags}
     if step is not None:
         meta["step"] = step
     if extra_meta:
         meta["extra"] = extra_meta
-    with open(os.path.join(path, "meta.json"), "w") as f:
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    if os.path.isdir(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
     return path
 
 
@@ -98,3 +109,28 @@ def restore_train_state(root: str, params_like, opt_like, step: int | None = Non
             raise FileNotFoundError(f"no checkpoints under {root}")
     tree = restore(root, {"params": params_like, "opt": opt_like}, step=step)
     return tree["params"], tree["opt"], step
+
+
+def load_meta(root: str, step: int) -> dict:
+    """The meta.json sidecar of one checkpoint (treedef, dtypes, extra)."""
+    with open(os.path.join(root, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
+
+
+def save_round_state(root: str, round_idx: int, states, history,
+                     extra_meta: dict | None = None) -> str:
+    """Chunk-boundary checkpoint of the scan engine (core/rounds.py):
+    the stacked ClientState plus the preallocated SimResult history buffers,
+    keyed by the number of completed rounds."""
+    return save(root, {"states": states, "hist": history}, step=round_idx,
+                extra_meta=extra_meta)
+
+
+def restore_round_state(root: str, states_like, hist_like, step: int | None = None):
+    """Inverse of save_round_state; returns (states, history, round_idx)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    tree = restore(root, {"states": states_like, "hist": hist_like}, step=step)
+    return tree["states"], tree["hist"], step

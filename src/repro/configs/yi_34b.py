@@ -3,7 +3,7 @@
 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
 Full attention -> long_500k skipped.  56 heads do not divide the 16-way
 model axis; projections are sharded on the flat H*hd dim (7168 % 16 == 0),
-see DESIGN.md Sec. 5.
+see DESIGN.md Sec. 6.
 """
 
 import dataclasses

@@ -28,6 +28,10 @@ from repro.core.gp_surrogate import (  # noqa: F401
     traj_append_batch,
     traj_init,
 )
+from repro.core.rounds import (  # noqa: F401
+    DEFAULT_CHUNK,
+    run_rounds,
+)
 from repro.core.rff import (  # noqa: F401
     RFFParams,
     approx_kernel,

@@ -380,7 +380,6 @@ def run_round(
         c_glob = mean_fn(states.c_local)
         states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
 
-    denom = cfg.local_steps * max(cfg.n_clients, 1)
     stats = RoundStats(
         server_x=new_server_x,
         mean_cos=mean_fn(sum_cos) / cfg.local_steps,
@@ -391,7 +390,6 @@ def run_round(
             / jnp.maximum(states.factor.n_updates.astype(jnp.float32), 1.0)
         ),
     )
-    del denom
     return states, stats
 
 
@@ -406,6 +404,7 @@ class SimResult(NamedTuple):
     queries: jax.Array  # (R,) cumulative mean queries per client
     mean_cos: jax.Array  # (R,)
     mean_disparity: jax.Array  # (R,)
+    refactor_rate: jax.Array  # (R,) factor-cache clamped-eigh fallback rate
 
 
 def simulate(
@@ -418,8 +417,22 @@ def simulate(
     x0: Optional[jax.Array] = None,
     diag_global_grad: Optional[Callable[[jax.Array], jax.Array]] = None,
     rff_key: Optional[jax.Array] = None,
+    chunk: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
 ) -> SimResult:
-    """Run R communication rounds in a single process (clients via vmap)."""
+    """Run R communication rounds in a single process (clients via vmap).
+
+    ``chunk`` selects the round driver: ``None`` (default) scans rounds in
+    chunks of ``rounds.DEFAULT_CHUNK`` on device (core/rounds.py -- one
+    dispatch per chunk, ``global_value_fn`` evaluated inside the scan);
+    ``chunk=k>0`` sets the chunk length; ``chunk=0`` keeps the seed
+    one-dispatch-per-round Python loop as the equivalence oracle.
+    ``checkpoint_dir`` (scan driver only) enables chunk-boundary
+    checkpoint/resume of the run.
+    """
+    if chunk is not None and chunk < 0:
+        raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
     if x0 is None:
         x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
     k_init, k_rff, k_rounds = jax.random.split(key, 3)
@@ -427,6 +440,21 @@ def simulate(
     if cfg.is_fzoos:
         rff = rfflib.make_rff(rff_key if rff_key is not None else k_rff, cfg.n_features, cfg.dim, cfg.lengthscale)
     states = init_states(cfg, k_init, x0)
+
+    if chunk is None or chunk > 0:
+        from repro.core import rounds as rounds_mod  # deferred: avoids cycle
+
+        if chunk is None:
+            chunk = rounds_mod.DEFAULT_CHUNK
+        _, res = rounds_mod.run_rounds(
+            cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
+            rounds, chunk, diag_global_grad=diag_global_grad,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        )
+        return res
+
+    if checkpoint_dir:
+        raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
     mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
 
     round_jit = jax.jit(
@@ -435,7 +463,7 @@ def simulate(
 
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
-    queries, coss, disps = [], [], []
+    queries, coss, disps, rrs = [], [], [], []
     sx = x0
     for _ in range(rounds):
         states, stats = round_jit(states, sx)
@@ -445,6 +473,7 @@ def simulate(
         queries.append(stats.queries_per_client)
         coss.append(stats.mean_cos)
         disps.append(stats.mean_disparity)
+        rrs.append(stats.refactor_rate)
 
     return SimResult(
         xs=jnp.stack(xs),
@@ -452,6 +481,7 @@ def simulate(
         queries=jnp.stack(queries),
         mean_cos=jnp.stack(coss),
         mean_disparity=jnp.stack(disps),
+        refactor_rate=jnp.stack(rrs),
     )
 
 

@@ -57,6 +57,20 @@ def _psum_mean(tree: Pytree, axes: tuple[str, ...], n_clients: int) -> Pytree:
     return jax.tree_util.tree_map(one, tree)
 
 
+def client_mean_fn(cfg: alg.AlgoConfig, mesh: Mesh):
+    """(client axes, psum-mean aggregation fn) with the shard contract
+    enforced: N clients must divide the product of the client mesh axes
+    (equal-size shards are what makes mean-of-shard-means the global mean).
+    """
+    axes = client_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if cfg.n_clients % n_shards:
+        raise ValueError(f"n_clients={cfg.n_clients} not divisible by client shards {n_shards}")
+    return axes, partial(_psum_mean, axes=axes, n_clients=cfg.n_clients)
+
+
 def distributed_round_fn(
     cfg: alg.AlgoConfig,
     mesh: Mesh,
@@ -68,18 +82,12 @@ def distributed_round_fn(
     Inputs (states, cobjs) are stacked over N clients; N must divide the
     product of the client mesh axes times 1-or-more clients per device.
     """
-    axes = client_axes(mesh)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    if cfg.n_clients % n_shards:
-        raise ValueError(f"n_clients={cfg.n_clients} not divisible by client shards {n_shards}")
+    axes, mean_fn = client_mean_fn(cfg, mesh)
 
     cspec = P(axes)  # shard the client axis over all client mesh axes
     rspec = P()  # replicated
 
     def round_body(states, cobjs, server_x):
-        mean_fn = partial(_psum_mean, axes=axes, n_clients=cfg.n_clients)
         new_states, stats = alg.run_round(
             cfg, rff, query_fn, cobjs, states, server_x, mean_fn, None
         )
@@ -115,8 +123,20 @@ def run_distributed(
     global_value_fn: Callable[[Any, jax.Array], jax.Array],
     rounds: int,
     x0: Optional[jax.Array] = None,
+    chunk: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
 ) -> alg.SimResult:
-    """Distributed analogue of algorithms.simulate (same history contract)."""
+    """Distributed analogue of algorithms.simulate (same history contract).
+
+    ``chunk`` selects the round driver exactly as in ``simulate``: ``None``
+    scans ``rounds.DEFAULT_CHUNK``-round chunks INSIDE shard_map (one
+    dispatch per chunk, the per-round psum stays the only collective),
+    ``chunk=k>0`` sets the chunk length, ``chunk=0`` keeps the seed
+    one-dispatch-per-round Python loop as the equivalence oracle.
+    """
+    if chunk is not None and chunk < 0:
+        raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
     if x0 is None:
         x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
     k_init, k_rff = jax.random.split(key)
@@ -127,11 +147,26 @@ def run_distributed(
     states = alg.init_states(cfg, k_init, x0)
     states = shard_clients(mesh, states)
     cobjs = shard_clients(mesh, cobjs)
+
+    if chunk is None or chunk > 0:
+        from repro.core import rounds as rounds_mod  # deferred: avoids cycle
+
+        if chunk is None:
+            chunk = rounds_mod.DEFAULT_CHUNK
+        _, res = rounds_mod.run_rounds(
+            cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
+            rounds, chunk, mesh=mesh,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        )
+        return res
+
+    if checkpoint_dir:
+        raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
     round_fn = distributed_round_fn(cfg, mesh, rff, query_fn)
 
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
-    queries, coss, disps = [], [], []
+    queries, coss, disps, rrs = [], [], [], []
     sx = x0
     for _ in range(rounds):
         states, stats = round_fn(states, cobjs, sx)
@@ -141,6 +176,7 @@ def run_distributed(
         queries.append(stats.queries_per_client)
         coss.append(stats.mean_cos)
         disps.append(stats.mean_disparity)
+        rrs.append(stats.refactor_rate)
 
     return alg.SimResult(
         xs=jnp.stack(xs),
@@ -148,4 +184,5 @@ def run_distributed(
         queries=jnp.stack(queries),
         mean_cos=jnp.stack(coss),
         mean_disparity=jnp.stack(disps),
+        refactor_rate=jnp.stack(rrs),
     )

@@ -13,7 +13,7 @@
    1 - precision on each client's label subset (Covertype stand-in:
    synthetic 7-class tabular data).
 
-3. LM-backbone objective (framework integration, DESIGN.md Sec. 4): the ZOO
+3. LM-backbone objective (framework integration, DESIGN.md Sec. 5): the ZOO
    input reparameterizes a low-dim slice of ANY architecture-zoo model
    (theta = theta0 + scale * (x - 1/2) on the final-norm gains) and the local
    function is the client's own token-batch loss -- this is what

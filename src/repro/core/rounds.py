@@ -1,0 +1,286 @@
+"""On-device multi-round scan engine (DESIGN.md Sec. 3).
+
+PR 1 made one local step ~6x cheaper, which moved the bottleneck up a level:
+the seed drivers (`algorithms.simulate`, `federated.run_distributed`) ran a
+Python `for` loop that re-dispatched one jitted round per iteration and
+synced to host every round to evaluate an un-jitted ``global_value_fn``.
+Query-parsimonious federated ZOO wants MANY cheap rounds (FedZeN; the
+Hessian-informed FedZOO line), so the round loop itself must stop paying
+per-round dispatch + host-roundtrip tax.
+
+This module scans ``run_round`` over K-round *chunks*:
+
+  * one ``lax.scan`` per chunk -> one compile (per chunk length), one
+    dispatch per chunk, zero host syncs mid-chunk;
+  * ``global_value_fn`` is evaluated INSIDE the scanned body, so the
+    F(x_r) curve is produced on device instead of round-tripping x_r;
+  * per-round history (server iterates, F values, query counters,
+    diagnostics) is written into preallocated on-device arrays with
+    ``dynamic_update_slice`` at a traced round offset -- chunk length and
+    history length are decoupled, so every full chunk reuses ONE executable;
+  * the stacked ``ClientState`` and the history buffers are DONATED to the
+    chunk executable, so the engine runs in place: no per-chunk copy of the
+    (N, cap, d) trajectory/Gram buffers;
+  * at chunk boundaries the engine can checkpoint {states, history} through
+    ``checkpoint.io`` and resume from the latest checkpoint, so long
+    federated runs survive preemption (the resume contract is
+    round-granular: a checkpoint at round r restarts at round r).
+
+Both front doors route here: ``algorithms.simulate`` (clients vmapped) and
+``federated.run_distributed`` (clients sharded).  The distributed path scans
+INSIDE ``shard_map`` so the per-round ``psum`` aggregation (plus one scalar
+``pmean`` for the F curve) remains the only collective traffic; chunk
+boundaries add no communication.
+
+``chunk=0`` keeps the seed Python-loop driver in both front doors -- that
+path is the equivalence oracle for the tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import algorithms as alg
+from repro.core import federated as fed
+from repro.core import rff as rfflib
+
+GlobalValueFn = Callable[[Any, jax.Array], jax.Array]
+
+#: Auto chunk length used when a front door is called with ``chunk=None``.
+#: Large enough to amortize dispatch, small enough that a preempted run
+#: loses little work and the first result arrives quickly.
+DEFAULT_CHUNK = 16
+
+
+def history_init(rounds: int, x0: jax.Array, f0: jax.Array) -> alg.SimResult:
+    """Preallocated on-device per-round history.  The buffers ARE the
+    eventual SimResult (same NamedTuple), filled in place chunk by chunk."""
+    return alg.SimResult(
+        xs=jnp.zeros((rounds + 1, x0.shape[-1]), x0.dtype).at[0].set(x0),
+        f_values=jnp.zeros((rounds + 1,), jnp.float32).at[0].set(
+            jnp.asarray(f0, jnp.float32)
+        ),
+        queries=jnp.zeros((rounds,), jnp.float32),
+        mean_cos=jnp.zeros((rounds,), jnp.float32),
+        mean_disparity=jnp.zeros((rounds,), jnp.float32),
+        refactor_rate=jnp.zeros((rounds,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunk bodies
+# ---------------------------------------------------------------------------
+
+
+def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad):
+    """One scanned round: run_round + on-device F(x_{r+1}) evaluation."""
+
+    def body(carry, _):
+        states, sx = carry
+        states, stats = alg.run_round(
+            cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad
+        )
+        f = jnp.asarray(eval_fn(cobjs, stats.server_x), jnp.float32)
+        ys = (
+            stats.server_x,
+            f,
+            stats.queries_per_client,
+            stats.mean_cos,
+            stats.mean_disparity,
+            stats.refactor_rate,
+        )
+        return (states, stats.server_x), ys
+
+    return body
+
+
+def sim_chunk_fn(
+    cfg: alg.AlgoConfig,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: alg.QueryFn,
+    global_value_fn: GlobalValueFn,
+    diag_global_grad,
+    length: int,
+):
+    """K scanned rounds with clients vmapped (single-process simulation)."""
+    mean_fn = lambda tree: jax.tree_util.tree_map(
+        lambda a: jnp.mean(a, axis=0), tree
+    )
+
+    def chunk(states, cobjs, sx):
+        body = _round_body(
+            cfg, rff, query_fn, cobjs, mean_fn, global_value_fn, diag_global_grad
+        )
+        (states, sx), ys = jax.lax.scan(body, (states, sx), None, length=length)
+        return states, sx, ys
+
+    return chunk
+
+
+def dist_chunk_fn(
+    cfg: alg.AlgoConfig,
+    mesh: Mesh,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: alg.QueryFn,
+    global_value_fn: GlobalValueFn,
+    length: int,
+):
+    """K scanned rounds INSIDE shard_map: the per-round psum aggregation
+    (plus one scalar pmean for F) stays the only collective."""
+    axes, mean_fn = fed.client_mean_fn(cfg, mesh)
+    cspec, rspec = P(axes), P()
+
+    # Each shard sees an equal-size slice of the stacked cobjs, so the mean
+    # of per-shard means IS the global mean F(x).
+    def eval_fn(cobjs, x):
+        return jax.lax.pmean(global_value_fn(cobjs, x), axes)
+
+    def local_chunk(states, cobjs, sx):
+        body = _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, None)
+        (states, sx), ys = jax.lax.scan(body, (states, sx), None, length=length)
+        return states, sx, ys
+
+    return shard_map(
+        local_chunk,
+        mesh=mesh,
+        in_specs=(cspec, cspec, rspec),
+        out_specs=(cspec, rspec, rspec),
+        check_rep=False,
+    )
+
+
+def _hist_write(hist: alg.SimResult, ys, offset: jax.Array) -> alg.SimResult:
+    """Write a chunk's stacked per-round outputs at round ``offset``."""
+    xs_k, f_k, q_k, cos_k, disp_k, rr_k = ys
+    dus = jax.lax.dynamic_update_slice
+    return alg.SimResult(
+        xs=dus(hist.xs, xs_k.astype(hist.xs.dtype), (offset + 1, 0)),
+        f_values=dus(hist.f_values, f_k, (offset + 1,)),
+        queries=dus(hist.queries, q_k, (offset,)),
+        mean_cos=dus(hist.mean_cos, cos_k, (offset,)),
+        mean_disparity=dus(hist.mean_disparity, disp_k, (offset,)),
+        refactor_rate=dus(hist.refactor_rate, rr_k, (offset,)),
+    )
+
+
+def make_chunk_step(chunk_fn):
+    """Jit one chunk step.  The client states and the history buffers are
+    donated: the engine mutates them in place across the whole run."""
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(states, hist, cobjs, sx, offset):
+        states, sx, ys = chunk_fn(states, cobjs, sx)
+        return states, _hist_write(hist, ys, offset), sx
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_rounds(
+    cfg: alg.AlgoConfig,
+    rff: Optional[rfflib.RFFParams],
+    query_fn: alg.QueryFn,
+    cobjs,
+    states: alg.ClientState,
+    x0: jax.Array,
+    global_value_fn: GlobalValueFn,
+    rounds: int,
+    chunk: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    diag_global_grad=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    resume: bool = True,
+) -> tuple[alg.ClientState, alg.SimResult]:
+    """Run ``rounds`` communication rounds in chunks of ``chunk`` scanned
+    iterations.  Returns (final stacked ClientState, SimResult history).
+
+    With ``mesh=None`` clients run vmapped in-process; with a mesh they are
+    sharded over the client axes and the scan runs inside shard_map.
+    ``checkpoint_dir`` enables chunk-boundary checkpointing of
+    {states, history} every ``checkpoint_every`` chunks (and at the end);
+    when a checkpoint exists and ``resume`` is True the run restarts from
+    the latest saved round.
+    """
+    if rounds < 0:
+        raise ValueError(f"rounds must be >= 0, got {rounds}")
+    if chunk < 1:
+        raise ValueError("run_rounds requires chunk >= 1 (chunk=0 selects the "
+                         "Python-loop oracle in the front doors)")
+    if mesh is not None and diag_global_grad is not None:
+        raise ValueError("diag_global_grad is only supported on the vmap path "
+                         "(mesh=None); the distributed round body runs without "
+                         "diagnostics, so passing one would silently return zeros")
+    chunk = min(chunk, max(rounds, 1))
+    x0 = jnp.asarray(x0)
+
+    # Resume identity: {rounds, AlgoConfig repr} are recorded at save time
+    # and must match at resume time, so a stale/reused checkpoint dir fails
+    # loudly instead of splicing two different experiments into one history.
+    # (The initial iterate and RNG key live in the restored state itself and
+    # so cannot drift; x0 passed here is ignored on resume.)
+    run_meta = {"rounds": rounds, "chunk": chunk, "cfg": repr(cfg)}
+    start, hist = 0, None
+    if checkpoint_dir and resume:
+        latest = ckpt_io.latest_step(checkpoint_dir)
+        if latest is not None:
+            saved = (ckpt_io.load_meta(checkpoint_dir, latest).get("extra") or {})
+            for field in ("rounds", "cfg"):
+                if saved.get(field) not in (None, run_meta[field]):
+                    raise ValueError(
+                        f"checkpoint_dir {checkpoint_dir!r} holds a run with "
+                        f"{field}={saved[field]!r}, cannot resume it with "
+                        f"{field}={run_meta[field]!r}; point at a fresh directory"
+                    )
+            # Resume path: the checkpointed history already holds f(x_0),
+            # so the (possibly expensive) initial eval is skipped.
+            hist_like = history_init(rounds, x0, jnp.zeros((), jnp.float32))
+            states, hist, start = ckpt_io.restore_round_state(
+                checkpoint_dir, states, hist_like, step=latest
+            )
+            start = min(start, rounds)
+            if mesh is not None:
+                states = fed.shard_clients(mesh, states)
+    if hist is None:
+        hist = history_init(rounds, x0, global_value_fn(cobjs, x0))
+
+    sx = hist.xs[start]
+    steps: dict[int, Any] = {}
+
+    def step_for(k: int):
+        if k not in steps:
+            if mesh is None:
+                cf = sim_chunk_fn(cfg, rff, query_fn, global_value_fn,
+                                  diag_global_grad, k)
+            else:
+                cf = dist_chunk_fn(cfg, mesh, rff, query_fn, global_value_fn, k)
+            steps[k] = make_chunk_step(cf)
+        return steps[k]
+
+    done, chunks_done = start, 0
+    while done < rounds:
+        k = min(chunk, rounds - done)
+        states, hist, sx = step_for(k)(
+            states, hist, cobjs, sx, jnp.asarray(done, jnp.int32)
+        )
+        done += k
+        chunks_done += 1
+        if checkpoint_dir and (
+            chunks_done % max(checkpoint_every, 1) == 0 or done == rounds
+        ):
+            ckpt_io.save_round_state(checkpoint_dir, done, states, hist,
+                                     extra_meta=run_meta)
+
+    return states, hist

@@ -76,9 +76,22 @@ def main() -> None:
     ap.add_argument("--q", type=int, default=20)
     ap.add_argument("--features", type=int, default=1000)
     ap.add_argument("--traj-cap", type=int, default=192)
+    ap.add_argument("--lengthscale", type=float, default=0.5,
+                    help="GP/RFF kernel lengthscale (AlgoConfig.lengthscale)")
+    ap.add_argument("--gp-noise", "--noise", dest="gp_noise", type=float, default=1e-5,
+                    help="GP observation-noise variance (AlgoConfig.noise)")
+    ap.add_argument("--gamma-mode", default="inv_t", choices=["inv_t", "const"],
+                    help="correction-length schedule (Cor. C.1 practical choice)")
+    ap.add_argument("--gamma-const", type=float, default=1.0,
+                    help="gamma value when --gamma-mode const")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="shard clients over the local device mesh via shard_map")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rounds per on-device scan chunk (core/rounds.py); "
+                         "0 = legacy one-dispatch-per-round loop")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="chunk-boundary checkpoint/resume dir (scan driver)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(args.seed)
@@ -89,24 +102,32 @@ def main() -> None:
     cfg = alg.AlgoConfig(
         name=args.algo, dim=dim, n_clients=args.clients, eta=args.eta,
         local_steps=args.local_steps, q=args.q, n_features=args.features,
-        traj_capacity=args.traj_cap, lengthscale=0.5, noise=1e-5,
+        traj_capacity=args.traj_cap, lengthscale=args.lengthscale,
+        noise=args.gp_noise, gamma_mode=args.gamma_mode,
+        gamma_const=args.gamma_const,
     )
     print(f"queries/round/client = {cfg.queries_per_round()}  "
           f"uplink floats/round/client = {cfg.comm_floats_per_round()}")
 
     t0 = time.time()
+    ckpt = args.ckpt_dir or None
     if args.distributed:
         mesh = make_host_mesh()
-        res = run_distributed(cfg, mesh, krun, cobjs, query, global_value, args.rounds)
+        res = run_distributed(cfg, mesh, krun, cobjs, query, global_value,
+                              args.rounds, chunk=args.chunk, checkpoint_dir=ckpt)
     else:
-        res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds)
+        res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds,
+                           chunk=args.chunk, checkpoint_dir=ckpt)
     dt = time.time() - t0
 
     f = res.f_values
     best = float(jnp.min(f))
     print(f"F(x_0) = {float(f[0]):+.5f}   F(x_R) = {float(f[-1]):+.5f}   "
-          f"best = {best:+.5f}   ({dt:.1f}s)")
-    for r in range(0, args.rounds + 1, max(args.rounds // 10, 1)):
+          f"best = {best:+.5f}   ({dt:.1f}s, "
+          f"{args.rounds / max(dt, 1e-9):.1f} rounds/s)")
+    stride = max(args.rounds // 10, 1)
+    shown = sorted(set(range(0, args.rounds + 1, stride)) | {args.rounds})
+    for r in shown:
         q = int(res.queries[r - 1]) if r > 0 else 0
         print(f"  round {r:4d}  F = {float(f[r]):+.5f}  queries/client = {q}")
 

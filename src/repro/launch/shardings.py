@@ -1,6 +1,6 @@
 """Input/output sharding builders for the dry-run and the real launchers.
 
-Placement policy (DESIGN.md Sec. 5):
+Placement policy (DESIGN.md Sec. 6):
   * batch dims over ("pod","data") (pod axis only when present),
   * params per the logical axes declared in models/params.py,
   * optimizer moments additionally ZeRO-1-sharded over 'data',

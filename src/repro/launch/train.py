@@ -59,8 +59,16 @@ def main() -> None:
     )
     step_fn = jax.jit(lambda p, o, b, lr: train_step(p, o, cfg, b, policy, lr))
 
+    if start >= args.steps:
+        # Restored checkpoint is already at (or past) the target step: the
+        # loop body would never run, so there are no metrics to save and
+        # nothing to do -- re-saving here used to hit an unbound `metrics`.
+        print(f"nothing to do: restored step {start} >= --steps {args.steps}")
+        return
+
     with mesh_context(mesh):
         t0 = time.time()
+        metrics = None
         for step in range(start, args.steps):
             batch = synthetic_batch(dcfg, step, cfg)
             params, opt, metrics = step_fn(params, opt, batch, sched(step))
@@ -73,7 +81,7 @@ def main() -> None:
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
                 save_train_state(args.ckpt_dir, step + 1, params, opt,
                                  {"loss": float(metrics["loss"])})
-        if args.ckpt_dir:
+        if args.ckpt_dir and metrics is not None:
             save_train_state(args.ckpt_dir, args.steps, params, opt,
                              {"loss": float(metrics["loss"])})
     print("done.")

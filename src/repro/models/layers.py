@@ -6,7 +6,7 @@ Conventions
 * activations default to the config dtype (bf16); norms, softmax and router
   math run in float32.
 * attention params are stored flat ``(d, H*hd)`` so the tensor-parallel shard
-  axis is always divisible (DESIGN.md Sec. 5); heads are reshaped inside.
+  axis is always divisible (DESIGN.md Sec. 6); heads are reshaped inside.
 * ``window > 0`` applies a local (sliding/chunked) attention mask -- the
   sub-quadratic mode used by llama4-style chunked attention and jamba's
   attention layers in long-context serving.

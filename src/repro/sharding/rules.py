@@ -66,13 +66,29 @@ class mesh_context:
         return False
 
 
+def _prune_absent(mesh: Mesh, axis):
+    """Drop axis names the mesh does not define from a logical axis entry,
+    so logical specs naming 'model' degrade to replicated on data-only
+    meshes (the host mesh train.py/fedzoo.py build on CPU).  A tuple entry
+    keeps only its present names -- emitting an absent name inside a
+    PartitionSpec would fail at NamedSharding placement."""
+    if axis is None or not isinstance(axis, (tuple, list)):
+        return axis if (axis is None or axis in mesh.axis_names) else None
+    kept = tuple(a for a in axis if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
+    """Product of mesh-axis sizes; absent axis names count as size 1."""
+    axis = _prune_absent(mesh, axis)
     if axis is None:
         return 1
     if isinstance(axis, (tuple, list)):
         n = 1
         for a in axis:
-            n *= mesh.shape[a]
+            n *= _axis_size(mesh, a)
         return n
     return mesh.shape[axis]
 
@@ -81,6 +97,7 @@ def spec_with_fallback(mesh: Mesh, shape: tuple[int, ...], axes: tuple[Any, ...]
     """Logical axes -> PartitionSpec, replicating any non-divisible dim."""
     out = []
     for dim, ax in zip(shape, axes):
+        ax = _prune_absent(mesh, ax)
         if ax is None:
             out.append(None)
             continue
@@ -105,6 +122,7 @@ def constrain(x: jax.Array, *axes) -> jax.Array:
     full = tuple(axes) + (None,) * (x.ndim - len(axes))
     out = []
     for dim, ax in zip(x.shape, full):
+        ax = _prune_absent(mesh, ax)
         if ax is None:
             out.append(unc)
             continue
@@ -129,7 +147,7 @@ def param_pspecs_from_axes(mesh: Mesh, shape: tuple[int, ...], axes: tuple[Any, 
 def zero1_extend(mesh: Mesh, shape: tuple[int, ...], spec: P, data_axes: tuple[str, ...] = ("data",)) -> P:
     """ZeRO-1: extend a param spec with a 'data' shard on the largest
     still-replicated divisible dim.  Applied to optimizer moments so the
-    Adam state never replicates across the data axis (DESIGN.md Sec. 5).
+    Adam state never replicates across the data axis (DESIGN.md Sec. 6).
     """
     n_data = 1
     for a in data_axes:

@@ -1,0 +1,62 @@
+"""Launcher regression tests: launch/train.py resume-at-end and the
+launch/fedzoo.py CLI driven end-to-end on the quadratic objective."""
+
+import sys
+
+import pytest
+
+from repro.launch import fedzoo as fedzoo_launch
+from repro.launch import train as train_launch
+
+
+def _run_main(monkeypatch, module, argv):
+    monkeypatch.setattr(sys, "argv", [f"{module.__name__}"] + argv)
+    module.main()
+
+
+TRAIN_ARGS = ["--arch", "qwen1_5_0_5b", "--variant", "smoke", "--steps", "2",
+              "--batch-size", "1", "--seq-len", "16", "--ckpt-every", "1"]
+
+
+def test_train_resume_at_end_regression(monkeypatch, tmp_path, capsys):
+    """A restored checkpoint with start >= --steps used to leave `metrics`
+    unbound at the trailing save_train_state (NameError)."""
+    ckpt = str(tmp_path / "train_ckpt")
+    _run_main(monkeypatch, train_launch, TRAIN_ARGS + ["--ckpt-dir", ckpt])
+    out = capsys.readouterr().out
+    assert "done." in out
+
+    # second invocation restores step 2 >= steps 2: loop body never runs
+    _run_main(monkeypatch, train_launch, TRAIN_ARGS + ["--ckpt-dir", ckpt])
+    out = capsys.readouterr().out
+    assert "restored step 2" in out
+    assert "nothing to do" in out
+
+
+@pytest.mark.parametrize("extra", [
+    ["--algo", "fzoos", "--chunk", "5"],
+    ["--algo", "fedzo", "--chunk", "0"],
+])
+def test_fedzoo_cli_smoke_quadratic(monkeypatch, capsys, extra):
+    """fedzoo.main() runs end-to-end on the quadratic and the progress table
+    includes the FINAL round even when rounds % stride != 0 (seed bug:
+    --rounds 7 with stride 1..10 never printed round 7 for e.g. 25/10)."""
+    argv = ["--objective", "quadratic", "--dim", "6", "--clients", "4",
+            "--rounds", "7", "--local-steps", "2", "--features", "16",
+            "--traj-cap", "16", "--lengthscale", "0.5", "--gp-noise", "1e-5",
+            "--gamma-mode", "inv_t"] + extra
+    _run_main(monkeypatch, fedzoo_launch, argv)
+    out = capsys.readouterr().out
+    assert "F(x_0)" in out
+    assert "round    7" in out  # final round always shown
+
+
+def test_fedzoo_cli_final_round_not_on_stride(monkeypatch, capsys):
+    """rounds=25 -> stride 2: the seed table stopped at 24."""
+    argv = ["--objective", "quadratic", "--dim", "4", "--clients", "2",
+            "--rounds", "25", "--local-steps", "1", "--algo", "fedzo",
+            "--q", "2", "--chunk", "25"]
+    _run_main(monkeypatch, fedzoo_launch, argv)
+    out = capsys.readouterr().out
+    assert "round   24" in out
+    assert "round   25" in out

@@ -127,3 +127,21 @@ def test_spec_with_fallback_divisibility():
     # nothing divisible -> unchanged
     got = zero1_extend(m, (3, 5), P(None, None))
     assert got == P(None, None)
+
+
+def test_spec_with_fallback_absent_axes_degrade_to_replicated():
+    """Logical axes naming mesh-absent axes (e.g. 'model' on the data-only
+    host mesh) replicate instead of KeyError / emitting invalid specs."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import spec_with_fallback
+
+    class HostMesh:  # what make_host_mesh() builds on CPU
+        shape = {"data": 8}
+        axis_names = ("data",)
+
+    m = HostMesh()
+    assert spec_with_fallback(m, (64, 160), (None, "model")) == P(None, None)
+    # tuple mixing absent+present axes keeps only the PRESENT name
+    assert spec_with_fallback(m, (32, 64), (("model", "data"), None)) == P("data", None)
+    assert spec_with_fallback(m, (33,), (("model", "data"),)) == P(None)  # 33 % 8
+    assert spec_with_fallback(m, (32,), (("model", "pod"),)) == P(None)  # all absent
