@@ -108,6 +108,53 @@ def _surrogate_step_bench(cap=128, d=20, n_cand=100, n_act=5, lengthscale=1.0):
     }
 
 
+def _client_batched_bench(cap=128, d=20, n_cand=100, lengthscale=1.0):
+    """Client-batched scoring/grad kernels (ISSUE 3 tentpole c): one launch
+    for the whole client batch vs N vmapped single-client launches, at
+    N in {8, 64} clients and the paper's active-query shape."""
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(2)
+    out = {}
+    for n_clients in (8, 64):
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, n_clients), 3)
+        cands = jax.random.uniform(k1, (n_clients, n_cand, d))
+        xs = jax.random.uniform(k2, (n_clients, cap, d))
+        a = jax.random.normal(k3, (n_clients, cap, cap)) / jnp.sqrt(cap * 1.0)
+        binv = jnp.einsum("bij,bkj->bik", a, a) + 0.1 * jnp.eye(cap)
+        pmat = binv * jnp.einsum("bcd,bkd->bck", xs, xs)
+        alpha = jax.random.normal(k1, (n_clients, cap))
+
+        sc_vmapped = jax.jit(jax.vmap(
+            lambda c, x, b, p: ops.uncertainty_scores(
+                c, x, b, p, lengthscale=lengthscale, prior=float(d))
+        ))
+        sc_batched = jax.jit(lambda c, x, b, p: ops.uncertainty_scores_clients(
+            c, x, b, p, lengthscale=lengthscale, prior=float(d)))
+        gm_vmapped = jax.jit(jax.vmap(
+            lambda c, x, al: ops.grad_mean_batch(c, x, al, lengthscale=lengthscale)
+        ))
+        gm_batched = jax.jit(lambda c, x, al: ops.grad_mean_clients(
+            c, x, al, lengthscale=lengthscale))
+
+        t_sc_v = t_sc_b = t_gm_v = t_gm_b = float("inf")
+        for _ in range(3):  # interleaved best-of (shared-machine noise)
+            t_sc_v = min(t_sc_v, _timeit(sc_vmapped, cands, xs, binv, pmat, iters=10))
+            t_sc_b = min(t_sc_b, _timeit(sc_batched, cands, xs, binv, pmat, iters=10))
+            t_gm_v = min(t_gm_v, _timeit(gm_vmapped, cands, xs, alpha, iters=10))
+            t_gm_b = min(t_gm_b, _timeit(gm_batched, cands, xs, alpha, iters=10))
+        out[f"n{n_clients}"] = {
+            "n_clients": n_clients, "cap": cap, "d": d, "n_candidates": n_cand,
+            "scores_vmapped_us": t_sc_v * 1e6,
+            "scores_batched_us": t_sc_b * 1e6,
+            "scores_speedup": t_sc_v / t_sc_b,
+            "grad_mean_vmapped_us": t_gm_v * 1e6,
+            "grad_mean_batched_us": t_gm_b * 1e6,
+            "grad_mean_speedup": t_gm_v / t_gm_b,
+        }
+    return out
+
+
 def _factor_primitive_bench(cap=128):
     """Decision-rule evidence (DESIGN.md Sec. 2.3): one blocked potrf vs one
     eigh vs one sequential-rotation cholupdate at ring capacity."""
@@ -179,10 +226,21 @@ def run(quick: bool = True) -> list[Row]:
     # the per-step surrogate hot path (tentpole) + factor-primitive evidence
     step = _surrogate_step_bench()
     prim = _factor_primitive_bench()
+    cb = _client_batched_bench()
     _JSON_PAYLOAD.clear()
     _JSON_PAYLOAD.update(
-        {"surrogate_step": step, "factor_primitives": prim, "quick": bool(quick)}
+        {"surrogate_step": step, "factor_primitives": prim,
+         "client_batched": cb, "quick": bool(quick)}
     )
+    for key_n, m in cb.items():
+        rows.append(Row(
+            f"client_batched/uncertainty_scores/{key_n}", m["scores_batched_us"],
+            f"vmapped_us={m['scores_vmapped_us']:.0f};speedup={m['scores_speedup']:.2f}x;"
+            f"cap={m['cap']};n_cand={m['n_candidates']}"))
+        rows.append(Row(
+            f"client_batched/grad_mean/{key_n}", m["grad_mean_batched_us"],
+            f"vmapped_us={m['grad_mean_vmapped_us']:.0f};speedup={m['grad_mean_speedup']:.2f}x;"
+            f"cap={m['cap']};n_cand={m['n_candidates']}"))
     rows.append(Row("surrogate_step/seed_eigh", step["seed_step_us"],
                     f"cap={step['traj_capacity']};d={step['dim']};steps_per_sec={step['steps_per_sec_seed']:.1f}"))
     rows.append(Row("surrogate_step/factor_cache", step["cached_step_us"],

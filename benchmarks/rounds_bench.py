@@ -35,6 +35,7 @@ from repro.core import algorithms as alg
 from repro.core import objectives as obj
 from repro.core import rff as rfflib
 from repro.core import rounds as rounds_mod
+from repro.launch import common as launch_common
 
 #: filled by run(); run.py serializes it to BENCH_rounds.json.  The driver
 #: configs are fixed regardless of quick/full mode so the file stays
@@ -57,11 +58,21 @@ def json_payload() -> dict:
     return _JSON_PAYLOAD
 
 
+#: the deferred-repair engine comparison (ISSUE 3 tentpole): the PR 2 scan
+#: engine with the inline-cond factor fallback (defer_repair=False; under
+#: the client vmap every append event materializes the O(cap^3) eigh) vs
+#: the branch-free deferred engine with client-batched kernels, at the
+#: paper's trajectory window cap=128.
+ENGINE_CFG = dict(local_steps=2, n_features=64, traj_capacity=128,
+                  active_per_iter=5, active_candidates=64, active_round_end=5,
+                  lengthscale=0.5, noise=1e-5)
+
+
 def _bench_one(algo: str, n_clients: int, rounds: int) -> dict:
     key = jax.random.PRNGKey(0)
     cobjs = obj.make_quadratic(key, n_clients, DIM, 5.0, 0.001)
-    cfg = alg.AlgoConfig(name=algo, dim=DIM, n_clients=n_clients,
-                         lengthscale=0.5, noise=1e-5, **_ALGOS[algo])
+    cfg = launch_common.make_config(algo, dim=DIM, n_clients=n_clients,
+                                    lengthscale=0.5, noise=1e-5, **_ALGOS[algo])
     x0 = jnp.full((DIM,), 0.5, jnp.float32)
     rff = None
     if cfg.is_fzoos:
@@ -129,13 +140,72 @@ def _bench_one(algo: str, n_clients: int, rounds: int) -> dict:
     }
 
 
+def _bench_engine(n_clients: int, rounds: int, defer: bool) -> dict:
+    """Steady-state ms/round of the SCANNED vmapped fzoos engine at cap=128.
+
+    ``defer=False`` is the PR 2 engine (inline-cond clamped-eigh fallback,
+    per-client vmapped kernels); ``defer=True`` is the deferred-repair
+    branch-free engine with client-batched kernels.  Both run through the
+    same pre-warmed donated chunk step, so the measured delta is the round
+    BODY, not driver overhead.
+    """
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, n_clients, DIM, 5.0, 0.001)
+    cfg = launch_common.make_config("fzoos", dim=DIM, n_clients=n_clients,
+                                    defer_repair=defer, **ENGINE_CFG)
+    x0 = jnp.full((DIM,), 0.5, jnp.float32)
+    rff = rfflib.make_rff(jax.random.PRNGKey(1), cfg.n_features, DIM, cfg.lengthscale)
+    query, gval = obj.quadratic_query, obj.quadratic_global_value
+
+    step = rounds_mod.make_chunk_step(
+        rounds_mod.sim_chunk_fn(cfg, rff, query, gval, None, CHUNK)
+    )
+
+    def fresh():
+        states = alg.init_states(cfg, jax.random.PRNGKey(2), x0)
+        hist = rounds_mod.history_init(rounds, x0, gval(cobjs, x0))
+        return states, hist
+
+    s_w, h_w = fresh()
+    jax.block_until_ready(step(s_w, h_w, cobjs, x0, jnp.int32(0))[2])  # compile
+
+    def time_once() -> tuple[float, float]:
+        states, hist = fresh()
+        jax.block_until_ready((states.x, hist.xs))
+        sx = x0
+        t0 = time.time()
+        for off in range(0, rounds, CHUNK):
+            states, hist, sx = step(states, hist, cobjs, sx, jnp.int32(off))
+            if defer:
+                states, _ = rounds_mod.repair_flagged_clients(states, cfg)
+        jax.block_until_ready(hist.xs)
+        dt = time.time() - t0
+        rep = float(jnp.nanmean(hist.repair_rate[:rounds]))
+        return dt, rep
+
+    best, rep = float("inf"), 0.0
+    for _ in range(REPEATS):
+        dt, rep = time_once()
+        best = min(best, dt)
+    pr = best / rounds
+    return {
+        "defer_repair": defer,
+        "n_clients": n_clients,
+        "traj_capacity": ENGINE_CFG["traj_capacity"],
+        "ms_per_round": pr * 1e3,
+        "rounds_per_sec": 1.0 / pr,
+        "repair_rate": rep,
+        "rounds_measured": rounds,
+    }
+
+
 def run(quick: bool) -> list[Row]:
     rounds = 4 * CHUNK if quick else 12 * CHUNK
     rows = []
     _JSON_PAYLOAD.clear()
     _JSON_PAYLOAD.update(
         {"chunk": CHUNK, "dim": DIM, "configs": {k: dict(v) for k, v in _ALGOS.items()},
-         "quick": bool(quick)}
+         "engine_config": dict(ENGINE_CFG), "quick": bool(quick)}
     )
     for algo in _ALGOS:
         for n in (8, 64):
@@ -149,4 +219,30 @@ def run(quick: bool) -> list[Row]:
                              f"dispatches_per_round={m[f'{drv}_dispatches_per_round']:g}"
                              + (f";speedup={m['speedup']:.2f}x" if drv == "new" else "")),
                 ))
+
+    # -- vmapped-engine body: PR 2 inline-cond vs deferred-repair (cap=128)
+    eng_rounds = CHUNK if quick else 2 * CHUNK
+    for n in (8, 64):
+        m_old = _bench_engine(n, eng_rounds, defer=False)
+        m_new = _bench_engine(n, eng_rounds, defer=True)
+        speedup = m_old["ms_per_round"] / m_new["ms_per_round"]
+        _JSON_PAYLOAD[f"engine_fzoos_n{n}"] = {
+            "inline_ms_per_round": m_old["ms_per_round"],
+            "deferred_ms_per_round": m_new["ms_per_round"],
+            "inline_rounds_per_sec": m_old["rounds_per_sec"],
+            "deferred_rounds_per_sec": m_new["rounds_per_sec"],
+            "speedup": speedup,
+            "repair_rate": m_new["repair_rate"],
+            "n_clients": n,
+            "traj_capacity": ENGINE_CFG["traj_capacity"],
+            "rounds_measured": eng_rounds,
+        }
+        for tag, m in (("inline", m_old), ("deferred", m_new)):
+            rows.append(Row(
+                name=f"engine_fzoos_{tag}_n{n}",
+                us_per_call=m["ms_per_round"] * 1e3,
+                derived=(f"rounds_per_sec={m['rounds_per_sec']:.2f};cap=128"
+                         + (f";speedup={speedup:.2f}x;repair_rate={m['repair_rate']:.3f}"
+                            if tag == "deferred" else "")),
+            ))
     return rows

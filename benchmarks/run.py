@@ -10,6 +10,14 @@ machine-readable across PRs.
     PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
     REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --only fig1,roofline
+
+``--compare`` diffs the fresh run against the COMMITTED ``BENCH_*.json``
+files instead of overwriting them, and exits nonzero on any perf metric
+regressing by more than ``--compare-tol`` (default 20%) -- so perf claims
+are checkable in CI without a dashboard.  Metric direction is inferred
+from the key name: ``*_us`` / ``*ms_per_round`` are lower-is-better,
+``*per_sec`` / ``*speedup`` are higher-is-better; everything else (shape
+descriptors, rates, flags) is informational and ignored.
 """
 
 from __future__ import annotations
@@ -35,16 +43,66 @@ MODULES = {
 }
 
 
+#: key-name suffix/substring -> metric direction for --compare.
+_LOWER_BETTER = ("_us", "_ms", "ms_per_round")
+_HIGHER_BETTER = ("per_sec", "speedup")
+
+
+def _metric_direction(key: str) -> str | None:
+    """'lower' / 'higher' for perf metrics, None for informational values."""
+    if any(key.endswith(s) for s in _LOWER_BETTER):
+        return "lower"
+    if any(s in key for s in _HIGHER_BETTER):
+        return "higher"
+    return None
+
+
+def _walk_metrics(payload, prefix=""):
+    """Yield (dotted_key, value) for every numeric leaf of a payload."""
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            yield from _walk_metrics(v, f"{prefix}{k}.")
+    elif isinstance(payload, (int, float)) and not isinstance(payload, bool):
+        yield prefix.rstrip("."), float(payload)
+
+
+def compare_payload(name: str, fresh: dict, committed_path: str, tol: float) -> list[str]:
+    """Regressions (> tol relative) of fresh vs the committed BENCH json."""
+    if not os.path.exists(committed_path):
+        return [f"{name}: no committed baseline at {committed_path}"]
+    with open(committed_path) as f:
+        committed = json.load(f)
+    base = dict(_walk_metrics(committed))
+    regressions = []
+    for key, val in _walk_metrics(fresh):
+        direction = _metric_direction(key.rsplit(".", 1)[-1])
+        if direction is None or key not in base or base[key] <= 0:
+            continue
+        rel = val / base[key] - 1.0
+        if (direction == "lower" and rel > tol) or (direction == "higher" and rel < -tol):
+            regressions.append(
+                f"{name}.{key}: {base[key]:.3g} -> {val:.3g} "
+                f"({rel:+.1%}, {direction}-is-better)"
+            )
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated subset of " + ",".join(MODULES))
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff against committed BENCH_*.json (no overwrite); "
+                         "exit nonzero on >tol perf regression")
+    ap.add_argument("--compare-tol", type=float, default=0.2,
+                    help="relative regression tolerance for --compare")
     args = ap.parse_args()
     quick = not (args.full or os.environ.get("REPRO_BENCH_FULL"))
 
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(MODULES)
     print("name,us_per_call,derived")
     failures = 0
+    regressions: list[str] = []
     for name in names:
         import importlib
 
@@ -57,15 +115,23 @@ def main() -> None:
             payload = getattr(mod, "json_payload", lambda: None)()
             if payload:
                 path = os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
-                with open(path, "w") as f:
-                    json.dump(payload, f, indent=2, sort_keys=True)
-                print(f"# {name}: wrote {path}", flush=True)
+                if args.compare:
+                    regs = compare_payload(name, payload, path, args.compare_tol)
+                    regressions.extend(regs)
+                    status = f"{len(regs)} regressions vs {path}" if regs else f"no regressions vs {path}"
+                    print(f"# {name}: {status}", flush=True)
+                else:
+                    with open(path, "w") as f:
+                        json.dump(payload, f, indent=2, sort_keys=True)
+                    print(f"# {name}: wrote {path}", flush=True)
             print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {name}: FAILED\n# " + traceback.format_exc().replace("\n", "\n# "),
                   flush=True)
-    if failures:
+    for r in regressions:
+        print(f"# REGRESSION {r}", flush=True)
+    if failures or regressions:
         sys.exit(1)
 
 

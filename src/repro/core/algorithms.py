@@ -72,6 +72,15 @@ class AlgoConfig:
     # refactorizing at every surrogate evaluation.  False = the seed's
     # eigh-from-scratch path, kept as the equivalence oracle for tests.
     use_factor_cache: bool = True
+    # Deferred-repair vmapped engine (DESIGN.md Sec. 2.6): the scanned round
+    # body is branch-free and eigh-free -- an unhealthy factor update flags
+    # the client and freezes its factors until the chunk-boundary repair pass
+    # -- and the local/post phases run client-BATCHED (one fused kernel
+    # launch per step for the whole client batch).  False keeps PR 2's
+    # inline-cond per-client path as the equivalence oracle, analogous to
+    # use_factor_cache=False / chunk=0.  Only meaningful for fzoos with the
+    # factor cache on (see ``deferred``).
+    defer_repair: bool = True
     # Round-end RFF fit: solve through the exact-GP cached factor (one
     # O(cap^2) solve) instead of eigh-refactorizing the RFF Gram.  Off by
     # default: the RFF-Gram solve is the paper's eq. 6 and changing it
@@ -91,6 +100,11 @@ class AlgoConfig:
     @property
     def is_fzoos(self) -> bool:
         return self.name == "fzoos"
+
+    @property
+    def deferred(self) -> bool:
+        """True when the deferred-repair client-batched engine is active."""
+        return self.is_fzoos and self.use_factor_cache and self.defer_repair
 
     @property
     def uses_fd(self) -> bool:
@@ -136,6 +150,7 @@ class RoundStats(NamedTuple):
     mean_disparity: jax.Array  # () mean ||ghat - grad F||^2 (Thm. 1 Xi)
     queries_per_client: jax.Array  # () mean cumulative queries
     refactor_rate: jax.Array  # () mean clamped-eigh fallbacks / factor updates
+    repair_rate: jax.Array  # () fraction of clients flagged needs_repair
 
 
 def _hyper_of(cfg: AlgoConfig) -> gp.GPHyper:
@@ -289,6 +304,131 @@ def _local_phase(
 
 
 # ---------------------------------------------------------------------------
+# Client-batched local/post phases (the deferred-repair engine).
+#
+# The per-client ``_local_phase`` is scanned over T INSIDE a client vmap, so
+# every surrogate contraction launches once per client.  Local steps are
+# collective-free and clients share all shapes, so scan-over-T with the
+# client batch INSIDE each step is the same algorithm -- and lets the
+# scoring / gradient-mean kernels take the whole client batch in ONE launch
+# (the client grid dimension of kernels/gp_score.py, gp_grad.py).  RNG key
+# derivations mirror the per-client path exactly, so the two engines follow
+# the same query sequence up to f32 contraction ordering.
+# ---------------------------------------------------------------------------
+
+
+def _local_phase_clients(
+    cfg: AlgoConfig,
+    rff: rfflib.RFFParams,
+    query_fn: QueryFn,
+    cobjs,
+    states: ClientState,  # stacked (N, ...)
+    diag_global_grad: Optional[Callable[[jax.Array], jax.Array]],
+) -> tuple[ClientState, jax.Array, jax.Array]:
+    """T local FZooS steps for the whole client batch (deferred factors)."""
+    _, opt_update = make_optimizer(cfg.optimizer)
+    hyper = _hyper_of(cfg)
+
+    def step(sts: ClientState, t):
+        ks = jax.vmap(lambda k: jax.random.split(k, 4))(sts.key)  # (N, 4, 2)
+        sts = sts._replace(key=ks[:, 0])
+        k_act = ks[:, 2]
+
+        y = jax.vmap(query_fn)(cobjs, sts.x, ks[:, 1])
+        traj, factor = gp.traj_extend_clients(
+            sts.traj, sts.factor, sts.x[:, None, :], y[:, None], hyper, deferred=True
+        )
+        n_q = 1
+        if cfg.active_per_iter > 0:
+            cands = gp.select_active_queries_cached_clients(
+                k_act, traj, factor, hyper, sts.x, cfg.active_candidates,
+                cfg.active_per_iter, cfg.active_radius, cfg.lo, cfg.hi,
+            )  # (N, n_act, d)
+            kq = jax.vmap(
+                lambda k: jax.random.split(jax.random.fold_in(k, 1), cfg.active_per_iter)
+            )(k_act)
+            ys = jax.vmap(
+                lambda cobj, cs, kk: jax.vmap(lambda c, k: query_fn(cobj, c, k))(cs, kk)
+            )(cobjs, cands, kq)
+            traj, factor = gp.traj_extend_clients(traj, factor, cands, ys, hyper, deferred=True)
+            n_q += cfg.active_per_iter
+        sts = sts._replace(traj=traj, factor=factor, queries=sts.queries + n_q)
+
+        # eq. (2): batched surrogate mean + per-client RFF correction
+        g_loc = gp.grad_mean_cached_clients(traj, factor, hyper, sts.x)  # (N, d)
+        corr = rfflib.grad_features_t_w_rows(rff, sts.x, sts.w_global) - \
+            rfflib.grad_features_t_w_rows(rff, sts.x, sts.w_local)
+        if cfg.gamma_mode == "inv_t":
+            gamma = 1.0 / t.astype(jnp.float32)
+        else:
+            gamma = jnp.asarray(cfg.gamma_const, jnp.float32)
+        ghat = g_loc + gamma * corr
+
+        new_x, new_opt = jax.vmap(lambda o, g, x: opt_update(o, g, x, cfg.eta))(
+            sts.opt, ghat, sts.x
+        )
+        new_x = jnp.clip(new_x, cfg.lo, cfg.hi)
+
+        if diag_global_grad is not None:
+            gf = jax.vmap(diag_global_grad)(sts.x)
+            cos = jnp.sum(ghat * gf, -1) / (
+                jnp.linalg.norm(ghat, axis=-1) * jnp.linalg.norm(gf, axis=-1) + 1e-12
+            )
+            disp = jnp.sum((ghat - gf) ** 2, -1)
+        else:
+            cos = jnp.zeros(sts.x.shape[:1])
+            disp = jnp.zeros(sts.x.shape[:1])
+
+        sts = sts._replace(x=new_x, opt=new_opt)
+        return sts, (cos, disp)
+
+    ts = jnp.arange(1, cfg.local_steps + 1)
+    states, (coss, disps) = jax.lax.scan(step, states, ts)
+    return states, jnp.sum(coss, axis=0), jnp.sum(disps, axis=0)
+
+
+def _post_phase_clients(
+    cfg: AlgoConfig,
+    rff: rfflib.RFFParams,
+    query_fn: QueryFn,
+    cobjs,
+    states: ClientState,
+    new_server_x: jax.Array,
+) -> ClientState:
+    """Round-end active queries + eigh-free RFF fit for the client batch."""
+    hyper = _hyper_of(cfg)
+    states = states._replace(x=jnp.broadcast_to(new_server_x, states.x.shape))
+    ks = jax.vmap(lambda k: jax.random.split(k, 2))(states.key)
+    states = states._replace(key=ks[:, 0])
+    k_act = ks[:, 1]
+    traj, factor = states.traj, states.factor
+    if cfg.active_round_end > 0:
+        cands = gp.select_active_queries_cached_clients(
+            k_act, traj, factor, hyper, states.x, cfg.active_candidates,
+            cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
+        )
+        kq = jax.vmap(
+            lambda k: jax.random.split(jax.random.fold_in(k, 2), cfg.active_round_end)
+        )(k_act)
+        ys = jax.vmap(
+            lambda cobj, cs, kk: jax.vmap(lambda c, k: query_fn(cobj, c, k))(cs, kk)
+        )(cobjs, cands, kq)
+        traj, factor = gp.traj_extend_clients(traj, factor, cands, ys, hyper, deferred=True)
+        states = states._replace(
+            traj=traj, factor=factor, queries=states.queries + cfg.active_round_end
+        )
+    if cfg.rff_fit_exact:
+        w_i = jax.vmap(lambda tr, fa: rfflib.fit_w_from_factor(rff, tr, fa))(traj, factor)
+    else:
+        # eq. 6 via blocked Cholesky with a branch-free exact-factor fallback
+        # -- the ONLY eigh of the seed round body that defer_repair does not
+        # merely defer, it removes (fit_w's clamped eigh was robustness, not
+        # math: see rff.fit_w_chol).
+        w_i = jax.vmap(lambda tr, fa: rfflib.fit_w_chol(rff, tr, hyper, fa))(traj, factor)
+    return states._replace(w_local=w_i)
+
+
+# ---------------------------------------------------------------------------
 # One full communication round (Algo. 1 / Algo. 2)
 # ---------------------------------------------------------------------------
 
@@ -323,10 +463,17 @@ def run_round(
         states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
 
     # ---- T local steps on every client in parallel ----
-    local = partial(_local_phase, cfg, rff, query_fn)
-    states, sum_cos, sum_disp = jax.vmap(
-        lambda cobj, st: local(cobj, st, server_x, diag_global_grad)
-    )(cobjs, states)
+    if cfg.deferred:
+        # Deferred-repair engine: branch-free factor updates, client-batched
+        # surrogate kernels (one launch per step for the whole batch).
+        states, sum_cos, sum_disp = _local_phase_clients(
+            cfg, rff, query_fn, cobjs, states, diag_global_grad
+        )
+    else:
+        local = partial(_local_phase, cfg, rff, query_fn)
+        states, sum_cos, sum_disp = jax.vmap(
+            lambda cobj, st: local(cobj, st, server_x, diag_global_grad)
+        )(cobjs, states)
 
     # ---- server aggregation of the iterates (line 7/9 of Algo. 1/2) ----
     new_server_x = mean_fn(states.x)
@@ -370,7 +517,10 @@ def run_round(
             st = st._replace(c_local=st.fd_accum / cfg.local_steps)
         return st
 
-    states = jax.vmap(post)(states, cobjs)
+    if cfg.deferred:
+        states = _post_phase_clients(cfg, rff, query_fn, cobjs, states, new_server_x)
+    else:
+        states = jax.vmap(post)(states, cobjs)
 
     # ---- second aggregation: w (FZooS) / control variates (scaffold2) ----
     if cfg.is_fzoos:
@@ -389,6 +539,7 @@ def run_round(
             states.factor.n_refactors.astype(jnp.float32)
             / jnp.maximum(states.factor.n_updates.astype(jnp.float32), 1.0)
         ),
+        repair_rate=mean_fn(states.factor.needs_repair.astype(jnp.float32)),
     )
     return states, stats
 
@@ -399,12 +550,21 @@ def run_round(
 
 
 class SimResult(NamedTuple):
+    """Per-round history of a run.
+
+    ``f_values[r]`` is F(x_r); with ``eval_every=k > 1`` only every k-th
+    round (plus round 0 and the final round) is evaluated and the skipped
+    rows hold NaN -- the objective curve degrades gracefully instead of
+    paying an expensive global eval every round.
+    """
+
     xs: jax.Array  # (R+1, d) server iterates
-    f_values: jax.Array  # (R+1,) F(x_r)
+    f_values: jax.Array  # (R+1,) F(x_r); NaN rows = skipped by eval_every
     queries: jax.Array  # (R,) cumulative mean queries per client
     mean_cos: jax.Array  # (R,)
     mean_disparity: jax.Array  # (R,)
     refactor_rate: jax.Array  # (R,) factor-cache clamped-eigh fallback rate
+    repair_rate: jax.Array  # (R,) fraction of clients flagged needs_repair
 
 
 def simulate(
@@ -420,6 +580,7 @@ def simulate(
     chunk: Optional[int] = None,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
+    eval_every: int = 1,
 ) -> SimResult:
     """Run R communication rounds in a single process (clients via vmap).
 
@@ -429,10 +590,14 @@ def simulate(
     ``chunk=k>0`` sets the chunk length; ``chunk=0`` keeps the seed
     one-dispatch-per-round Python loop as the equivalence oracle.
     ``checkpoint_dir`` (scan driver only) enables chunk-boundary
-    checkpoint/resume of the run.
+    checkpoint/resume of the run.  ``eval_every=k`` evaluates the (possibly
+    expensive) ``global_value_fn`` only every k-th round plus the final one;
+    skipped ``f_values`` rows hold NaN (see SimResult).
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
     if x0 is None:
         x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
     k_init, k_rff, k_rounds = jax.random.split(key, 3)
@@ -450,6 +615,7 @@ def simulate(
             cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
             rounds, chunk, diag_global_grad=diag_global_grad,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            eval_every=eval_every,
         )
         return res
 
@@ -461,27 +627,41 @@ def simulate(
         lambda states, sx: run_round(cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad)
     )
 
+    if cfg.deferred:
+        from repro.core import rounds as rounds_mod  # deferred: avoids cycle
+
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
-    queries, coss, disps, rrs = [], [], [], []
+    queries, coss, disps, rrs, reps = [], [], [], [], []
     sx = x0
-    for _ in range(rounds):
+    for r in range(rounds):
         states, stats = round_jit(states, sx)
+        if cfg.deferred:
+            # Loop oracle for the scan engine's chunk boundary: repair after
+            # every round (the chunk=1 degenerate case of the deferred
+            # contract -- flags never persist across rounds here).
+            states, _ = rounds_mod.repair_flagged_clients(states, cfg)
         sx = stats.server_x
         xs.append(sx)
-        fvals.append(global_value_fn(cobjs, sx))
+        r1 = r + 1
+        if r1 % eval_every == 0 or r1 == rounds:
+            fvals.append(global_value_fn(cobjs, sx))
+        else:
+            fvals.append(jnp.full((), jnp.nan, jnp.float32))
         queries.append(stats.queries_per_client)
         coss.append(stats.mean_cos)
         disps.append(stats.mean_disparity)
         rrs.append(stats.refactor_rate)
+        reps.append(stats.repair_rate)
 
     return SimResult(
         xs=jnp.stack(xs),
-        f_values=jnp.stack(fvals),
+        f_values=jnp.stack([jnp.asarray(f, jnp.float32) for f in fvals]),
         queries=jnp.stack(queries),
         mean_cos=jnp.stack(coss),
         mean_disparity=jnp.stack(disps),
         refactor_rate=jnp.stack(rrs),
+        repair_rate=jnp.stack(reps),
     )
 
 

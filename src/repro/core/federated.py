@@ -126,6 +126,7 @@ def run_distributed(
     chunk: Optional[int] = None,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
+    eval_every: int = 1,
 ) -> alg.SimResult:
     """Distributed analogue of algorithms.simulate (same history contract).
 
@@ -134,9 +135,13 @@ def run_distributed(
     dispatch per chunk, the per-round psum stays the only collective),
     ``chunk=k>0`` sets the chunk length, ``chunk=0`` keeps the seed
     one-dispatch-per-round Python loop as the equivalence oracle.
+    ``eval_every`` follows the ``simulate`` contract (skipped ``f_values``
+    rows hold NaN).
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
     if x0 is None:
         x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
     k_init, k_rff = jax.random.split(key)
@@ -157,32 +162,45 @@ def run_distributed(
             cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
             rounds, chunk, mesh=mesh,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            eval_every=eval_every,
         )
         return res
 
     if checkpoint_dir:
         raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
+    from repro.core import rounds as rounds_mod  # deferred: avoids cycle
+
     round_fn = distributed_round_fn(cfg, mesh, rff, query_fn)
 
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
-    queries, coss, disps, rrs = [], [], [], []
+    queries, coss, disps, rrs, reps = [], [], [], [], []
     sx = x0
-    for _ in range(rounds):
+    for r in range(rounds):
         states, stats = round_fn(states, cobjs, sx)
+        if cfg.deferred:
+            # Loop-oracle boundary: per-shard masked repair after every round
+            # (the chunk=1 degenerate case of the deferred contract).
+            states, _ = rounds_mod.repair_flagged_clients(states, cfg, mesh=mesh)
         sx = stats.server_x
         xs.append(sx)
-        fvals.append(global_value_fn(cobjs, sx))
+        r1 = r + 1
+        if r1 % eval_every == 0 or r1 == rounds:
+            fvals.append(global_value_fn(cobjs, sx))
+        else:
+            fvals.append(jnp.full((), jnp.nan, jnp.float32))
         queries.append(stats.queries_per_client)
         coss.append(stats.mean_cos)
         disps.append(stats.mean_disparity)
         rrs.append(stats.refactor_rate)
+        reps.append(stats.repair_rate)
 
     return alg.SimResult(
         xs=jnp.stack(xs),
-        f_values=jnp.stack(fvals),
+        f_values=jnp.stack([jnp.asarray(f, jnp.float32) for f in fvals]),
         queries=jnp.stack(queries),
         mean_cos=jnp.stack(coss),
         mean_disparity=jnp.stack(disps),
         refactor_rate=jnp.stack(rrs),
+        repair_rate=jnp.stack(reps),
     )

@@ -303,6 +303,14 @@ class GramFactor(NamedTuple):
     through ``(eigvecs, eigvals)`` -- the clamped spectrum -- instead; the
     next append event always refreshes from ``gram`` directly, so inexact
     factors never compound.
+
+    ``needs_repair`` is the deferred-repair flag (DESIGN.md Sec. 2.6): the
+    branch-free update path (``factor_update_deferred``) never eigh-repairs
+    inline.  An unhealthy candidate factor raises the flag and FREEZES the
+    factor -- solves keep routing through the last-good factors -- until the
+    chunk-boundary repair pass (``factor_repair_masked`` /
+    ``core.rounds.repair_flagged_clients``) refactorizes the exact cached
+    Gram.  The inline path (``factor_update``) never sets it.
     """
 
     gram: jax.Array  # (cap, cap) padded Gram matrix (always exact)
@@ -311,7 +319,8 @@ class GramFactor(NamedTuple):
     eigvals: jax.Array  # (cap,) clamped spectrum (valid iff not exact)
     exact: jax.Array  # () bool -- solve route selector
     n_updates: jax.Array  # () int32 incremental append events applied
-    n_refactors: jax.Array  # () int32 clamped-eigh fallbacks taken
+    n_refactors: jax.Array  # () int32 clamped-eigh fallbacks/repairs taken
+    needs_repair: jax.Array  # () bool -- deferred-repair flag (frozen factors)
 
 
 def _factor_health(chol: jax.Array, mask: jax.Array, jitter: jax.Array) -> jax.Array:
@@ -350,6 +359,7 @@ def factor_init(traj: Trajectory, hyper: GPHyper) -> GramFactor:
         exact=ok,
         n_updates=jnp.zeros((), jnp.int32),
         n_refactors=(~ok).astype(jnp.int32),
+        needs_repair=jnp.zeros((), bool),
     )
 
 
@@ -409,6 +419,25 @@ def chol_rank1_update(chol: jax.Array, x: jax.Array, sign: float, floor: jax.Arr
     return L, ok
 
 
+def _gram_replace_rows(
+    factor: GramFactor,
+    traj_new: Trajectory,
+    hyper: GPHyper,
+    k: int,
+    old_count: jax.Array,
+) -> jax.Array:
+    """Exact incremental row/col replacement of the padded Gram: O(k*cap*d)."""
+    cap = traj_new.capacity
+    jitter = _jitter_of(hyper)
+    mask = traj_new.valid_mask()
+    idx = jnp.mod(old_count + jnp.arange(k), cap)  # replaced slots
+    xb = traj_new.xs[idx]  # (k, d)
+    rows = sqexp(xb, traj_new.xs, hyper.lengthscale) * mask[None, :]
+    rows = rows.at[jnp.arange(k), idx].add(jitter)  # live diagonal = 1 + jitter
+    gram = factor.gram.at[idx, :].set(rows)
+    return gram.at[:, idx].set(rows.T)
+
+
 def factor_update(
     factor: GramFactor,
     traj_new: Trajectory,
@@ -426,14 +455,7 @@ def factor_update(
         raise ValueError(f"append event of {k} rows exceeds capacity {cap}")
     jitter = _jitter_of(hyper)
     mask = traj_new.valid_mask()
-    idx = jnp.mod(old_count + jnp.arange(k), cap)  # replaced slots
-
-    # --- exact incremental update of the padded Gram matrix: O(k * cap * d)
-    xb = traj_new.xs[idx]  # (k, d)
-    rows = sqexp(xb, traj_new.xs, hyper.lengthscale) * mask[None, :]
-    rows = rows.at[jnp.arange(k), idx].add(jitter)  # live diagonal = 1 + jitter
-    gram = factor.gram.at[idx, :].set(rows)
-    gram = gram.at[:, idx].set(rows.T)
+    gram = _gram_replace_rows(factor, traj_new, hyper, k, old_count)
 
     # --- factor maintenance: border while filling, blocked refresh after wrap
     fits = old_count + k <= cap
@@ -463,6 +485,96 @@ def factor_update(
         exact=ok,
         n_updates=factor.n_updates + 1,
         n_refactors=factor.n_refactors + (~ok).astype(jnp.int32),
+        needs_repair=jnp.zeros((), bool),
+    )
+
+
+def factor_update_deferred(
+    factor: GramFactor,
+    traj_new: Trajectory,
+    hyper: GPHyper,
+    k: int,
+    old_count: jax.Array,
+) -> GramFactor:
+    """Branch-free Cholesky-only factor maintenance: NO eigh, ever.
+
+    Same inputs/contract as ``factor_update``, but the rare unhealthy case
+    no longer falls back to the clamped-eigh refactorization inline (under a
+    client vmap ``lax.cond`` computes both branches, so the inline fallback
+    costs one O(cap^3) eigh per client per append event whether taken or
+    not).  Instead:
+
+      * a healthy candidate factor (border pre-wrap, blocked potrf refresh
+        post-wrap) is adopted as before;
+      * an unhealthy candidate raises ``needs_repair`` and the factor
+        FREEZES: solves keep routing through the last-good factors (the
+        stale Cholesky factor when ``exact``, the retained eigh factors
+        otherwise) via the same masked selection ``factor_solve`` already
+        uses.  The cached Gram keeps its exact row/col updates, so nothing
+        is lost -- the repair pass refactorizes it whole;
+      * a flagged factor adopts NOTHING until ``factor_repair_masked``
+        (driven at chunk boundaries by ``core.rounds.repair_flagged_clients``)
+        clears the flag with one batched clamped-eigh over the flagged
+        clients -- amortizing the eigh from per-step-per-client to
+        per-chunk-per-flagged-client.
+
+    Inexact factors still never compound: the first update after a repair
+    refreshes from the (always-exact) cached Gram, exactly like the inline
+    path.
+    """
+    cap = traj_new.capacity
+    if k > cap:
+        raise ValueError(f"append event of {k} rows exceeds capacity {cap}")
+    jitter = _jitter_of(hyper)
+    mask = traj_new.valid_mask()
+    gram = _gram_replace_rows(factor, traj_new, hyper, k, old_count)
+
+    fits = old_count + k <= cap
+    use_border = fits & factor.exact & ~factor.needs_repair
+
+    # Border vs blocked refresh under lax.cond: the unbatched per-device path
+    # skips the untaken O(cap^3/3) potrf; under a client vmap both candidates
+    # are computed and masked -- still no eigh anywhere in the graph.
+    cand = jax.lax.cond(
+        use_border,
+        lambda: _border_extend(factor.chol, gram, old_count, k, jitter),
+        lambda: jnp.linalg.cholesky(gram),
+    )
+    ok = _factor_health(cand, mask, jitter)
+    adopt = ok & ~factor.needs_repair
+    return GramFactor(
+        gram=gram,
+        chol=jnp.where(adopt, cand, factor.chol),
+        eigvecs=factor.eigvecs,
+        eigvals=factor.eigvals,
+        exact=jnp.where(adopt, True, factor.exact),
+        n_updates=factor.n_updates + 1,
+        n_refactors=factor.n_refactors,  # repairs are counted at the boundary
+        needs_repair=factor.needs_repair | ~ok,
+    )
+
+
+def factor_repair_masked(factor: GramFactor, jitter: jax.Array) -> GramFactor:
+    """Clamped-eigh repair of flagged clients over a STACKED factor batch.
+
+    ``factor`` leaves carry a leading client axis.  One batched eigh of the
+    exact cached Grams; only flagged clients adopt the new (clamped) eigh
+    factors -- identical to the inline fallback's pseudo-solve -- and drop
+    their flag.  Runs under jit/shard_map with no collectives, so the
+    distributed engine repairs per-shard.  (The vmap front door gathers the
+    flagged subset on the host first -- see ``core.rounds`` -- so the eigh
+    batch really is flagged-clients-only there.)
+    """
+    w, v = jnp.linalg.eigh(factor.gram)
+    w = jnp.maximum(w, jitter)
+    flag = factor.needs_repair  # (N,)
+    fv = flag[:, None, None]
+    return factor._replace(
+        eigvecs=jnp.where(fv, v.astype(factor.eigvecs.dtype), factor.eigvecs),
+        eigvals=jnp.where(flag[:, None], w.astype(factor.eigvals.dtype), factor.eigvals),
+        exact=jnp.where(flag, False, factor.exact),
+        n_refactors=factor.n_refactors + flag.astype(jnp.int32),
+        needs_repair=jnp.zeros_like(flag),
     )
 
 
@@ -472,11 +584,18 @@ def traj_extend(
     xs: jax.Array,
     ys: jax.Array,
     hyper: GPHyper,
+    deferred: bool = False,
 ) -> tuple[Trajectory, GramFactor]:
-    """Append a (static-size) batch of queries and maintain the factor."""
+    """Append a (static-size) batch of queries and maintain the factor.
+
+    ``deferred=True`` selects the branch-free Cholesky-only update
+    (``factor_update_deferred``); the default keeps the inline clamped-eigh
+    fallback as the equivalence oracle.
+    """
     old_count = traj.count
     traj2 = traj_append_batch(traj, xs, ys)
-    return traj2, factor_update(factor, traj2, hyper, xs.shape[0], old_count)
+    upd = factor_update_deferred if deferred else factor_update
+    return traj2, upd(factor, traj2, hyper, xs.shape[0], old_count)
 
 
 def factor_solve(factor: GramFactor, b: jax.Array) -> jax.Array:
@@ -585,3 +704,100 @@ def select_active_queries_cached(
     scores = grad_uncertainty_batch_cached(traj, factor, hyper, cands)
     _, top = jax.lax.top_k(scores, n_select)
     return cands[top]
+
+
+# ---------------------------------------------------------------------------
+# Client-batched cached surrogate (DESIGN.md Sec. 2.6 / Sec. 4).
+#
+# Under the vmapped simulation engine every client evaluates the SAME
+# surrogate contraction shapes at every local step, so the scoring and
+# gradient-mean kernels take the whole client batch in ONE launch (a client
+# grid dimension in the Pallas kernels) instead of N vmapped launches.  All
+# stacked arguments carry a leading client axis N; the math per client is
+# identical to the unbatched functions above (tested).
+# ---------------------------------------------------------------------------
+
+
+def traj_extend_clients(
+    trajs: Trajectory,
+    factors: GramFactor,
+    xs: jax.Array,  # (N, k, d)
+    ys: jax.Array,  # (N, k)
+    hyper: GPHyper,
+    deferred: bool = False,
+) -> tuple[Trajectory, GramFactor]:
+    """``traj_extend`` over a stacked client batch (same default as there)."""
+    return jax.vmap(lambda tr, fa, x, y: traj_extend(tr, fa, x, y, hyper, deferred))(
+        trajs, factors, xs, ys
+    )
+
+
+def gp_alpha_cached_clients(trajs: Trajectory, factors: GramFactor) -> jax.Array:
+    """Stacked alpha = (K + s^2 I)^{-1} y, (N, cap)."""
+    masks = jax.vmap(Trajectory.valid_mask)(trajs)
+    return jax.vmap(factor_solve)(factors, trajs.ys * masks)
+
+
+def grad_mean_cached_clients(
+    trajs: Trajectory, factors: GramFactor, hyper: GPHyper, xs: jax.Array
+) -> jax.Array:
+    """Posterior gradient mean at one point per client: (N, d) -> (N, d).
+
+    One client-batched fused kernel launch (``ops.grad_mean_clients``)
+    instead of N vmapped launches.
+    """
+    from repro.kernels import ops  # deferred: keep core importable without kernels
+
+    alpha = gp_alpha_cached_clients(trajs, factors)
+    # block_n=8 (the f32 sublane tile): the candidate axis is a single query
+    # point here, so the default 128-row block would be ~99% padding work.
+    out = ops.grad_mean_clients(
+        xs[:, None, :], trajs.xs, alpha, lengthscale=hyper.lengthscale, block_n=8
+    )
+    return out[:, 0, :]
+
+
+def grad_uncertainty_batch_cached_clients(
+    trajs: Trajectory, factors: GramFactor, hyper: GPHyper, xs_q: jax.Array
+) -> jax.Array:
+    """Uncertainty scores for a per-client candidate batch: (N, nc, d) -> (N, nc).
+
+    Client-batched analogue of ``grad_uncertainty_batch_cached`` (same
+    centroid-shifted contraction, see that docstring for the numerics); the
+    whole client batch is ONE fused pass in ``ops.uncertainty_scores_clients``.
+    """
+    from repro.kernels import ops  # deferred: keep core importable without kernels
+
+    masks = jax.vmap(Trajectory.valid_mask)(trajs)  # (N, cap)
+    binv = jax.vmap(factor_inverse)(factors) * (masks[:, :, None] * masks[:, None, :])
+    c0 = jnp.mean(xs_q, axis=1)  # (N, d) per-client candidate centroid
+    xs_sh = (trajs.xs - c0[:, None, :]) * masks[:, :, None]
+    pmat = binv * jnp.einsum("ncd,nkd->nck", xs_sh, xs_sh)
+    d = trajs.xs.shape[-1]
+    prior = d / (hyper.lengthscale**2)
+    return ops.uncertainty_scores_clients(
+        xs_q - c0[:, None, :], xs_sh, binv, pmat, lengthscale=hyper.lengthscale, prior=prior
+    )
+
+
+def select_active_queries_cached_clients(
+    keys: jax.Array,  # (N, 2) per-client PRNG keys
+    trajs: Trajectory,
+    factors: GramFactor,
+    hyper: GPHyper,
+    centers: jax.Array,  # (N, d)
+    n_candidates: int,
+    n_select: int,
+    radius: float,
+    lo: float = 0.0,
+    hi: float = 1.0,
+) -> jax.Array:
+    """``select_active_queries_cached`` for the whole client batch: (N, n_select, d)."""
+    d = centers.shape[-1]
+    delta = jax.vmap(
+        lambda k: jax.random.uniform(k, (n_candidates, d), minval=-radius, maxval=radius)
+    )(keys)
+    cands = jnp.clip(centers[:, None, :] + delta, lo, hi)
+    scores = grad_uncertainty_batch_cached_clients(trajs, factors, hyper, cands)
+    _, top = jax.lax.top_k(scores, n_select)  # batched over the client axis
+    return jnp.take_along_axis(cands, top[:, :, None], axis=1)

@@ -71,6 +71,14 @@ def grad_features_t_w_batch(params: RFFParams, xs: jax.Array, w: jax.Array) -> j
     return -math.sqrt(2.0 / m) * ((s * w[None, :]) @ params.v)
 
 
+def grad_features_t_w_rows(params: RFFParams, xs: jax.Array, ws: jax.Array) -> jax.Array:
+    """Per-row weight vectors (the client-batched engine): xs (n, d), ws (n, M)
+    -> (n, d).  Row i is ``grad_features_t_w(params, xs[i], ws[i])``."""
+    m = params.n_features
+    s = jnp.sin(xs @ params.v.T + params.b[None, :])  # (n, M)
+    return -math.sqrt(2.0 / m) * ((s * ws) @ params.v)
+
+
 def fit_w(params: RFFParams, traj: Trajectory, hyper: GPHyper) -> jax.Array:
     """w = Phi (Khat + s^2 I)^{-1} y  with the same masked-padding scheme as
     the exact GP (invalid trajectory slots contribute nothing).  -> (M,)
@@ -86,6 +94,33 @@ def fit_w(params: RFFParams, traj: Trajectory, hyper: GPHyper) -> jax.Array:
     w = jnp.maximum(w, jitter)
     alpha = v @ ((v.T @ (traj.ys * mask)) / w)
     return phi.T @ alpha
+
+
+def fit_w_chol(params: RFFParams, traj: Trajectory, hyper: GPHyper, factor) -> jax.Array:
+    """Eigh-free eq. 6 fit for the deferred-repair engine (DESIGN.md Sec. 2.6).
+
+    Same RFF-Gram system as ``fit_w`` but solved with one blocked Cholesky
+    instead of the clamped eigh (``Khat`` is PSD and the jitter floor keeps
+    the padded system PD in exact arithmetic, so the potrf is the natural
+    factorization; the eigh was only ever the NaN-robustness fallback).
+    Robustness is preserved branch-free: if any live pivot dips below the
+    same pivot floor the solve routes -- by masked selection, no eigh in the
+    graph -- through the client's cached exact-GP ``GramFactor``, i.e. the
+    ``fit_w_from_factor`` answer, which differs from eq. 6 only by the
+    O(1/sqrt(M)) feature-approximation error the method already tolerates.
+    """
+    from repro.core import gp_surrogate as gp
+
+    mask = traj.valid_mask()
+    phi = features(params, traj.xs) * mask[:, None]
+    jitter = jnp.maximum(hyper.noise, 1e-4)
+    gram = phi @ phi.T + jnp.diag(jitter * mask + (1.0 - mask))
+    chol = jnp.linalg.cholesky(gram)
+    ok = gp._factor_health(chol, mask, jitter)
+    ys_m = traj.ys * mask
+    alpha = jax.scipy.linalg.cho_solve((jnp.where(ok, chol, jnp.eye(gram.shape[0], dtype=gram.dtype)), True), ys_m)
+    alpha_fb = gp.factor_solve(factor, ys_m)
+    return phi.T @ jnp.where(ok, alpha, alpha_fb)
 
 
 def fit_w_from_factor(params: RFFParams, traj: Trajectory, factor) -> jax.Array:

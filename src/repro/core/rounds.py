@@ -43,12 +43,14 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.checkpoint import io as ckpt_io
 from repro.core import algorithms as alg
 from repro.core import federated as fed
+from repro.core import gp_surrogate as gp
 from repro.core import rff as rfflib
 
 GlobalValueFn = Callable[[Any, jax.Array], jax.Array]
@@ -71,6 +73,7 @@ def history_init(rounds: int, x0: jax.Array, f0: jax.Array) -> alg.SimResult:
         mean_cos=jnp.zeros((rounds,), jnp.float32),
         mean_disparity=jnp.zeros((rounds,), jnp.float32),
         refactor_rate=jnp.zeros((rounds,), jnp.float32),
+        repair_rate=jnp.zeros((rounds,), jnp.float32),
     )
 
 
@@ -79,15 +82,35 @@ def history_init(rounds: int, x0: jax.Array, f0: jax.Array) -> alg.SimResult:
 # ---------------------------------------------------------------------------
 
 
-def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad):
-    """One scanned round: run_round + on-device F(x_{r+1}) evaluation."""
+def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad,
+                eval_every: int, rounds_total: Optional[int]):
+    """One scanned round: run_round + on-device F(x_{r+1}) evaluation.
 
-    def body(carry, _):
-        states, sx = carry
+    The scanned xs is the in-chunk round index; the carry holds the traced
+    absolute offset so ``eval_every`` gates the (possibly expensive) global
+    eval on the ABSOLUTE completed-round count: rows for skipped rounds hold
+    NaN, round ``rounds_total`` is always evaluated.  ``lax.cond`` is safe
+    here -- the scan carry is unbatched, so the untaken eval is skipped for
+    real (that is the whole point for LM-backbone objectives).
+    """
+
+    def body(carry, i):
+        states, sx, offset = carry
         states, stats = alg.run_round(
             cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad
         )
-        f = jnp.asarray(eval_fn(cobjs, stats.server_x), jnp.float32)
+
+        def do_eval():
+            return jnp.asarray(eval_fn(cobjs, stats.server_x), jnp.float32)
+
+        if eval_every == 1:
+            f = do_eval()
+        else:
+            r1 = offset + i + 1  # 1-based absolute completed-round index
+            want = r1 % eval_every == 0
+            if rounds_total is not None:
+                want = want | (r1 == rounds_total)
+            f = jax.lax.cond(want, do_eval, lambda: jnp.full((), jnp.nan, jnp.float32))
         ys = (
             stats.server_x,
             f,
@@ -95,8 +118,9 @@ def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad):
             stats.mean_cos,
             stats.mean_disparity,
             stats.refactor_rate,
+            stats.repair_rate,
         )
-        return (states, stats.server_x), ys
+        return (states, stats.server_x, offset), ys
 
     return body
 
@@ -108,17 +132,22 @@ def sim_chunk_fn(
     global_value_fn: GlobalValueFn,
     diag_global_grad,
     length: int,
+    eval_every: int = 1,
+    rounds_total: Optional[int] = None,
 ):
     """K scanned rounds with clients vmapped (single-process simulation)."""
     mean_fn = lambda tree: jax.tree_util.tree_map(
         lambda a: jnp.mean(a, axis=0), tree
     )
 
-    def chunk(states, cobjs, sx):
+    def chunk(states, cobjs, sx, offset):
         body = _round_body(
-            cfg, rff, query_fn, cobjs, mean_fn, global_value_fn, diag_global_grad
+            cfg, rff, query_fn, cobjs, mean_fn, global_value_fn, diag_global_grad,
+            eval_every, rounds_total,
         )
-        (states, sx), ys = jax.lax.scan(body, (states, sx), None, length=length)
+        (states, sx, _), ys = jax.lax.scan(
+            body, (states, sx, offset), jnp.arange(length)
+        )
         return states, sx, ys
 
     return chunk
@@ -131,6 +160,8 @@ def dist_chunk_fn(
     query_fn: alg.QueryFn,
     global_value_fn: GlobalValueFn,
     length: int,
+    eval_every: int = 1,
+    rounds_total: Optional[int] = None,
 ):
     """K scanned rounds INSIDE shard_map: the per-round psum aggregation
     (plus one scalar pmean for F) stays the only collective."""
@@ -138,19 +169,24 @@ def dist_chunk_fn(
     cspec, rspec = P(axes), P()
 
     # Each shard sees an equal-size slice of the stacked cobjs, so the mean
-    # of per-shard means IS the global mean F(x).
+    # of per-shard means IS the global mean F(x).  (The eval-every cond
+    # predicate is a pure function of the replicated round offset, so every
+    # device takes the same branch and the pmean inside stays matched.)
     def eval_fn(cobjs, x):
         return jax.lax.pmean(global_value_fn(cobjs, x), axes)
 
-    def local_chunk(states, cobjs, sx):
-        body = _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, None)
-        (states, sx), ys = jax.lax.scan(body, (states, sx), None, length=length)
+    def local_chunk(states, cobjs, sx, offset):
+        body = _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, None,
+                           eval_every, rounds_total)
+        (states, sx, _), ys = jax.lax.scan(
+            body, (states, sx, offset), jnp.arange(length)
+        )
         return states, sx, ys
 
     return shard_map(
         local_chunk,
         mesh=mesh,
-        in_specs=(cspec, cspec, rspec),
+        in_specs=(cspec, cspec, rspec, rspec),
         out_specs=(cspec, rspec, rspec),
         check_rep=False,
     )
@@ -158,7 +194,7 @@ def dist_chunk_fn(
 
 def _hist_write(hist: alg.SimResult, ys, offset: jax.Array) -> alg.SimResult:
     """Write a chunk's stacked per-round outputs at round ``offset``."""
-    xs_k, f_k, q_k, cos_k, disp_k, rr_k = ys
+    xs_k, f_k, q_k, cos_k, disp_k, rr_k, rep_k = ys
     dus = jax.lax.dynamic_update_slice
     return alg.SimResult(
         xs=dus(hist.xs, xs_k.astype(hist.xs.dtype), (offset + 1, 0)),
@@ -167,6 +203,7 @@ def _hist_write(hist: alg.SimResult, ys, offset: jax.Array) -> alg.SimResult:
         mean_cos=dus(hist.mean_cos, cos_k, (offset,)),
         mean_disparity=dus(hist.mean_disparity, disp_k, (offset,)),
         refactor_rate=dus(hist.refactor_rate, rr_k, (offset,)),
+        repair_rate=dus(hist.repair_rate, rep_k, (offset,)),
     )
 
 
@@ -176,10 +213,79 @@ def make_chunk_step(chunk_fn):
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def step(states, hist, cobjs, sx, offset):
-        states, sx, ys = chunk_fn(states, cobjs, sx)
+        states, sx, ys = chunk_fn(states, cobjs, sx, offset)
         return states, _hist_write(hist, ys, offset), sx
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Deferred-repair pass (chunk boundaries; DESIGN.md Sec. 2.6)
+# ---------------------------------------------------------------------------
+
+
+#: jitted per-(mesh, capacity) shard_map repair executables (rare-event path).
+_DIST_REPAIR_CACHE: dict = {}
+
+
+def repair_flagged_clients(
+    states: alg.ClientState,
+    cfg: alg.AlgoConfig,
+    mesh: Optional[Mesh] = None,
+) -> tuple[alg.ClientState, int]:
+    """Repair every client flagged ``needs_repair`` by the deferred engine.
+
+    Reads the (N,)-bool flag vector to host -- the one sync the deferred
+    contract pays per chunk -- and returns unchanged states when nothing is
+    flagged (the overwhelmingly common case: the flag fires only on genuine
+    f32 indefiniteness, measured rate ~0).  When clients ARE flagged:
+
+      * vmap path (``mesh=None``): gather the flagged subset and run ONE
+        batched clamped-eigh over exactly those Grams -- the eigh amortizes
+        from per-step-per-client to per-chunk-per-flagged-client;
+      * distributed path: a jitted ``shard_map`` masked repair over the
+        local clients of each shard (flag counts are not static under jit,
+        so every local client's Gram enters the batched eigh and only
+        flagged ones adopt).  No collectives: the per-round psum stays the
+        only communication.
+
+    Returns (states, number of clients repaired).
+    """
+    if not cfg.deferred:
+        return states, 0
+    flags = np.asarray(jax.device_get(states.factor.needs_repair))
+    n_flagged = int(flags.sum())
+    if n_flagged == 0:
+        return states, 0
+    jitter = jnp.maximum(jnp.asarray(cfg.noise, jnp.float32), 1e-4)
+
+    if mesh is None:
+        # Gather the flagged subset, repair it (ONE batched eigh over exactly
+        # those Grams -- the same masked primitive the shard path uses, so
+        # the repair semantics live in one place), scatter it back.
+        idx = jnp.asarray(np.nonzero(flags)[0])
+        sub = jax.tree_util.tree_map(lambda a: a[idx], states.factor)
+        rep = gp.factor_repair_masked(sub, jitter)
+        factor = jax.tree_util.tree_map(
+            lambda full, r: full.at[idx].set(r), states.factor, rep
+        )
+        return states._replace(factor=factor), n_flagged
+
+    key = (mesh, states.factor.gram.shape)
+    if key not in _DIST_REPAIR_CACHE:
+        axes = fed.client_axes(mesh)
+        cspec = P(axes)
+        _DIST_REPAIR_CACHE[key] = jax.jit(
+            shard_map(
+                lambda fac, jit_: gp.factor_repair_masked(fac, jit_),
+                mesh=mesh,
+                in_specs=(cspec, P()),
+                out_specs=cspec,
+                check_rep=False,
+            )
+        )
+    factor = _DIST_REPAIR_CACHE[key](states.factor, jitter)
+    return states._replace(factor=factor), n_flagged
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +309,7 @@ def run_rounds(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     resume: bool = True,
+    eval_every: int = 1,
 ) -> tuple[alg.ClientState, alg.SimResult]:
     """Run ``rounds`` communication rounds in chunks of ``chunk`` scanned
     iterations.  Returns (final stacked ClientState, SimResult history).
@@ -212,13 +319,19 @@ def run_rounds(
     ``checkpoint_dir`` enables chunk-boundary checkpointing of
     {states, history} every ``checkpoint_every`` chunks (and at the end);
     when a checkpoint exists and ``resume`` is True the run restarts from
-    the latest saved round.
+    the latest saved round.  ``eval_every=k`` evaluates ``global_value_fn``
+    inside the scan only every k-th round (plus the final one); skipped
+    ``f_values`` rows hold NaN.  With ``cfg.deferred`` the loop runs the
+    chunk-boundary repair pass (``repair_flagged_clients``) between scan
+    dispatches.
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")
     if chunk < 1:
         raise ValueError("run_rounds requires chunk >= 1 (chunk=0 selects the "
                          "Python-loop oracle in the front doors)")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
     if mesh is not None and diag_global_grad is not None:
         raise ValueError("diag_global_grad is only supported on the vmap path "
                          "(mesh=None); the distributed round body runs without "
@@ -231,7 +344,8 @@ def run_rounds(
     # loudly instead of splicing two different experiments into one history.
     # (The initial iterate and RNG key live in the restored state itself and
     # so cannot drift; x0 passed here is ignored on resume.)
-    run_meta = {"rounds": rounds, "chunk": chunk, "cfg": repr(cfg)}
+    run_meta = {"rounds": rounds, "chunk": chunk, "cfg": repr(cfg),
+                "eval_every": eval_every}
     start, hist = 0, None
     if checkpoint_dir and resume:
         latest = ckpt_io.latest_step(checkpoint_dir)
@@ -263,9 +377,10 @@ def run_rounds(
         if k not in steps:
             if mesh is None:
                 cf = sim_chunk_fn(cfg, rff, query_fn, global_value_fn,
-                                  diag_global_grad, k)
+                                  diag_global_grad, k, eval_every, rounds)
             else:
-                cf = dist_chunk_fn(cfg, mesh, rff, query_fn, global_value_fn, k)
+                cf = dist_chunk_fn(cfg, mesh, rff, query_fn, global_value_fn,
+                                   k, eval_every, rounds)
             steps[k] = make_chunk_step(cf)
         return steps[k]
 
@@ -277,6 +392,9 @@ def run_rounds(
         )
         done += k
         chunks_done += 1
+        # Deferred-repair pass BETWEEN scan dispatches: one batched
+        # clamped-eigh over the flagged clients (no-op sync when none are).
+        states, _ = repair_flagged_clients(states, cfg, mesh=mesh)
         if checkpoint_dir and (
             chunks_done % max(checkpoint_every, 1) == 0 or done == rounds
         ):

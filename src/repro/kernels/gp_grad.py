@@ -13,6 +13,10 @@ h-tile nor the explicit (cap, d) dkdx Jacobian ever materializes in HBM --
 the seed path built J per query point.
 
 Grid: (n / block_n,); xs and alpha stay resident across programs.
+
+``grad_mean_clients_kernel`` adds a CLIENT grid dimension for the vmapped
+federated engine: one launch computes the gradient mean for the whole
+client batch (grid (N, n/block_n)) instead of N vmapped launches.
 """
 
 from __future__ import annotations
@@ -24,21 +28,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(c_ref, x_ref, a_ref, o_ref, *, inv_two_l2: float, inv_l2: float):
-    c = c_ref[...]  # (bn, d)
-    x = x_ref[...]  # (cap, d)
+def _grad_block(c, x, alpha, *, inv_two_l2: float, inv_l2: float):
+    """Shared VMEM-tile numerics of both kernels.  c (bn, d), x (cap, d),
+    alpha (1, cap) -> (bn, d)."""
     n1 = jnp.sum(c * c, axis=-1, keepdims=True)  # (bn, 1)
     n2 = jnp.sum(x * x, axis=-1, keepdims=True).T  # (1, cap)
     cross = jax.lax.dot_general(
         c, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
     d2 = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
-    w = jnp.exp(-d2 * inv_two_l2) * a_ref[...]  # (bn, cap), alpha row-broadcast
+    w = jnp.exp(-d2 * inv_two_l2) * alpha  # (bn, cap), alpha row-broadcast
     acc = jax.lax.dot_general(
         w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )  # (bn, d)
     s = jnp.sum(w, axis=-1, keepdims=True)
-    o_ref[...] = ((acc - s * c) * inv_l2).astype(o_ref.dtype)
+    return (acc - s * c) * inv_l2
+
+
+def _kernel(c_ref, x_ref, a_ref, o_ref, **kw):
+    o_ref[...] = _grad_block(c_ref[...], x_ref[...], a_ref[...], **kw).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("lengthscale", "block_n", "interpret"))
@@ -68,5 +76,44 @@ def grad_mean_kernel(
             pl.BlockSpec((1, cap), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        interpret=interpret,
+    )(cands, xs, alpha)
+
+
+def _kernel_clients(c_ref, x_ref, a_ref, o_ref, **kw):
+    # Leading block dim of every ref is the (size-1) client slot; the tile
+    # numerics are shared with the unbatched kernel (_grad_block).
+    o_ref[0] = _grad_block(c_ref[0], x_ref[0], a_ref[0], **kw).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lengthscale", "block_n", "interpret"))
+def grad_mean_clients_kernel(
+    cands: jax.Array,  # (N, n, d)
+    xs: jax.Array,  # (N, cap, d)
+    alpha: jax.Array,  # (N, 1, cap) -- row vectors for TPU-friendly layout
+    *,
+    lengthscale: float,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Client-batched gradient mean: grid (N, n/block_n) -> (N, n, d)."""
+    nb, n, d = cands.shape
+    cap = xs.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
+    assert alpha.shape == (nb, 1, cap), alpha.shape
+    grid = (nb, n // block_n)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_clients, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, n, d), cands.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, cap, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, cap), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
         interpret=interpret,
     )(cands, xs, alpha)

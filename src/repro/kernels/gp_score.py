@@ -15,6 +15,11 @@ triangular-solve scoring with O(cap^2) of MXU matmuls per candidate.
 Grid: (n / block_n,); xs, B and P stay resident across programs.  The
 candidate-cross-trajectory matmul table doubles as the c.x_t table of the
 middle term, so the whole score needs three MXU contractions per block.
+
+``uncertainty_scores_clients_kernel`` adds a CLIENT grid dimension for the
+vmapped federated engine: one launch scores the whole client batch (grid
+(N, n/block_n), per-client xs/B/P blocks indexed by the client program id)
+instead of N vmapped launches with their N sets of resident operands.
 """
 
 from __future__ import annotations
@@ -26,9 +31,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(c_ref, x_ref, b_ref, p_ref, o_ref, *, inv_two_l2: float, inv_l4: float, prior: float):
-    c = c_ref[...]  # (bn, d)
-    x = x_ref[...]  # (cap, d)
+def _score_block(c, x, binv, pmat, *, inv_two_l2: float, inv_l4: float, prior: float):
+    """Shared VMEM-tile numerics of both kernels.  c (bn, d), x (cap, d),
+    binv/pmat (cap, cap) -> (bn, 1)."""
     n1 = jnp.sum(c * c, axis=-1, keepdims=True)  # (bn, 1)
     n2 = jnp.sum(x * x, axis=-1, keepdims=True).T  # (1, cap)
     cross = jax.lax.dot_general(
@@ -37,16 +42,22 @@ def _kernel(c_ref, x_ref, b_ref, p_ref, o_ref, *, inv_two_l2: float, inv_l4: flo
     d2 = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
     h = jnp.exp(-d2 * inv_two_l2)
     g1 = jax.lax.dot_general(
-        h, p_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        h, pmat, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     g2 = jax.lax.dot_general(
-        h, b_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        h, binv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     t1 = jnp.sum(g1 * h, axis=-1, keepdims=True)
     t2 = jnp.sum(h * cross * g2, axis=-1, keepdims=True)
     t3 = n1 * jnp.sum(h * g2, axis=-1, keepdims=True)
     corr = (t1 - 2.0 * t2 + t3) * inv_l4
-    o_ref[...] = jnp.maximum(prior - corr, 0.0).astype(o_ref.dtype)
+    return jnp.maximum(prior - corr, 0.0)
+
+
+def _kernel(c_ref, x_ref, b_ref, p_ref, o_ref, **kw):
+    o_ref[...] = _score_block(
+        c_ref[...], x_ref[...], b_ref[...], p_ref[...], **kw
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -87,3 +98,53 @@ def uncertainty_scores_kernel(
         interpret=interpret,
     )(cands, xs, binv, pmat)
     return out[:, 0]
+
+
+def _kernel_clients(c_ref, x_ref, b_ref, p_ref, o_ref, **kw):
+    # Leading block dim of every ref is the (size-1) client slot; the tile
+    # numerics are shared with the unbatched kernel (_score_block).
+    o_ref[0] = _score_block(
+        c_ref[0], x_ref[0], b_ref[0], p_ref[0], **kw
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lengthscale", "prior", "block_n", "interpret")
+)
+def uncertainty_scores_clients_kernel(
+    cands: jax.Array,  # (N, n, d)
+    xs: jax.Array,  # (N, cap, d)
+    binv: jax.Array,  # (N, cap, cap)
+    pmat: jax.Array,  # (N, cap, cap)
+    *,
+    lengthscale: float,
+    prior: float,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Client-batched scoring: grid (N, n/block_n) -> (N, n)."""
+    nb, n, d = cands.shape
+    cap = xs.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
+    assert binv.shape == pmat.shape == (nb, cap, cap), (binv.shape, pmat.shape)
+    grid = (nb, n // block_n)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel_clients,
+            inv_two_l2=0.5 / (lengthscale**2),
+            inv_l4=1.0 / (lengthscale**4),
+            prior=prior,
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, n, 1), cands.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, cap, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, cap, cap), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, cap, cap), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, 1), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(cands, xs, binv, pmat)
+    return out[:, :, 0]

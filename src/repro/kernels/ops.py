@@ -14,8 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.gp_grad import grad_mean_kernel
-from repro.kernels.gp_score import uncertainty_scores_kernel
+from repro.kernels.gp_grad import grad_mean_clients_kernel, grad_mean_kernel
+from repro.kernels.gp_score import (
+    uncertainty_scores_clients_kernel,
+    uncertainty_scores_kernel,
+)
 from repro.kernels.rff_features import rff_features_kernel
 from repro.kernels.rff_grad import rff_grad_kernel
 from repro.kernels.sqexp import sqexp_kernel
@@ -48,6 +51,14 @@ def _pad_rows(a: jax.Array, target: int) -> jax.Array:
     if pad == 0:
         return a
     return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+def _pad_axis1(a: jax.Array, target: int) -> jax.Array:
+    """Zero-pad the second axis (the per-client candidate axis)."""
+    pad = target - a.shape[1]
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
 
 
 def rff_features(
@@ -149,6 +160,60 @@ def uncertainty_scores(
         lengthscale=ls, prior=pr, block_n=block_n, interpret=not _on_tpu(),
     )
     return out[:n]
+
+
+def uncertainty_scores_clients(
+    cands: jax.Array,
+    xs: jax.Array,
+    binv: jax.Array,
+    pmat: jax.Array,
+    *,
+    lengthscale,
+    prior,
+    block_n: int = 128,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Client-batched fused uncertainty scores: (N, n, d) -> (N, n).
+
+    One kernel launch with a client grid dimension for the whole batch;
+    same padding/backend/traced-scalar contract as ``uncertainty_scores``
+    (the candidate axis is padded per client, the client axis never is).
+    """
+    ls, pr = _static_float(lengthscale), _static_float(prior)
+    if not (_on_tpu() or force_pallas) or ls is None or pr is None:
+        return ref.uncertainty_scores_clients(cands, xs, binv, pmat, lengthscale, prior)
+    n = cands.shape[1]
+    npad = _round_up(n, block_n)
+    out = uncertainty_scores_clients_kernel(
+        _pad_axis1(cands, npad), xs, binv, pmat,
+        lengthscale=ls, prior=pr, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:, :n]
+
+
+def grad_mean_clients(
+    cands: jax.Array,
+    xs: jax.Array,
+    alpha: jax.Array,
+    *,
+    lengthscale,
+    block_n: int = 128,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Client-batched fused gradient mean: (N, n, d) -> (N, n, d).
+
+    ``alpha`` (N, cap) must already carry each client's validity mask.
+    """
+    ls = _static_float(lengthscale)
+    if not (_on_tpu() or force_pallas) or ls is None:
+        return ref.grad_mean_clients(cands, xs, alpha, lengthscale)
+    n = cands.shape[1]
+    npad = _round_up(n, block_n)
+    out = grad_mean_clients_kernel(
+        _pad_axis1(cands, npad), xs, alpha[:, None, :],
+        lengthscale=ls, block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:, :n, :]
 
 
 def grad_mean_batch(

@@ -75,6 +75,51 @@ def uncertainty_scores(
     return jnp.maximum(prior - corr, 0.0).astype(cands.dtype)
 
 
+def uncertainty_scores_clients(
+    cands: jax.Array,
+    xs: jax.Array,
+    binv: jax.Array,
+    pmat: jax.Array,
+    lengthscale: float,
+    prior: float,
+) -> jax.Array:
+    """Client-batched ``uncertainty_scores``: one batched contraction pass.
+
+    cands (N, n, d), xs (N, cap, d), binv/pmat (N, cap, cap) -> (N, n).
+    Per-client math identical to the unbatched oracle (property-tested);
+    mirrors the client grid dimension of the batched Pallas kernel.
+    """
+    n1 = jnp.sum(cands * cands, axis=-1)  # (N, n)
+    n2 = jnp.sum(xs * xs, axis=-1)  # (N, cap)
+    cross = jnp.einsum("bnd,bcd->bnc", cands, xs)  # doubles as the c.x_t table
+    d2 = jnp.maximum(n1[..., None] + n2[:, None, :] - 2.0 * cross, 0.0)
+    h = jnp.exp(-0.5 * d2 / (lengthscale**2))
+    g1 = jnp.einsum("bnc,bck->bnk", h, pmat)
+    g2 = jnp.einsum("bnc,bck->bnk", h, binv)
+    t1 = jnp.sum(g1 * h, axis=-1)
+    t2 = jnp.sum(h * cross * g2, axis=-1)
+    t3 = n1 * jnp.sum(h * g2, axis=-1)
+    corr = (t1 - 2.0 * t2 + t3) / (lengthscale**4)
+    return jnp.maximum(prior - corr, 0.0).astype(cands.dtype)
+
+
+def grad_mean_clients(
+    cands: jax.Array, xs: jax.Array, alpha: jax.Array, lengthscale: float
+) -> jax.Array:
+    """Client-batched ``grad_mean_batch``.
+
+    cands (N, n, d), xs (N, cap, d), alpha (N, cap) -> (N, n, d).
+    """
+    n1 = jnp.sum(cands * cands, axis=-1)
+    n2 = jnp.sum(xs * xs, axis=-1)
+    cross = jnp.einsum("bnd,bcd->bnc", cands, xs)
+    d2 = jnp.maximum(n1[..., None] + n2[:, None, :] - 2.0 * cross, 0.0)
+    h = jnp.exp(-0.5 * d2 / (lengthscale**2))
+    w = h * alpha[:, None, :]
+    out = jnp.einsum("bnc,bcd->bnd", w, xs) - jnp.sum(w, axis=-1, keepdims=True) * cands
+    return (out / (lengthscale**2)).astype(cands.dtype)
+
+
 def grad_mean_batch(
     cands: jax.Array, xs: jax.Array, alpha: jax.Array, lengthscale: float
 ) -> jax.Array:

@@ -1,0 +1,96 @@
+"""Shared AlgoConfig plumbing for launchers and benchmarks.
+
+The launchers and the benchmark modules each used to assemble
+``AlgoConfig`` by hand, so every new algorithm knob (lengthscale, gamma
+schedule, factor cache, deferred repair, ...) had to be wired in N places
+and the flag sets drifted (ROADMAP item).  This module is the single
+mapping from CLI flags / benchmark overrides to ``AlgoConfig``:
+
+  * ``add_algo_flags(parser)``  -- install the algorithm flag set on an
+    argparse parser (used by ``launch.fedzoo``);
+  * ``config_from_args(args, dim=..., n_clients=...)`` -- build the config
+    from parsed flags;
+  * ``make_config(name, dim=..., n_clients=..., **overrides)`` -- the same
+    builder for programmatic callers (benchmarks, tests), so benchmark
+    configs go through exactly the code path the launcher exercises.
+
+Engine-selection knobs that are NOT per-algorithm (``--chunk``,
+``--ckpt-dir``, ``--eval-every``) ride along in ``add_engine_flags`` so the
+benchmark harness and the launcher stay in sync there too.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import algorithms as alg
+
+#: argparse flag -> AlgoConfig field for the plain value flags.
+_FLAG_FIELDS = {
+    "algo": "name",
+    "eta": "eta",
+    "local_steps": "local_steps",
+    "q": "q",
+    "features": "n_features",
+    "traj_cap": "traj_capacity",
+    "lengthscale": "lengthscale",
+    "gp_noise": "noise",
+    "gamma_mode": "gamma_mode",
+    "gamma_const": "gamma_const",
+}
+
+
+def add_algo_flags(ap: argparse.ArgumentParser) -> None:
+    """Install the shared per-algorithm flag set (AlgoConfig surface)."""
+    ap.add_argument("--algo", default="fzoos", choices=list(alg.ALGORITHMS))
+    ap.add_argument("--local-steps", type=int, default=10, help="T")
+    ap.add_argument("--eta", type=float, default=0.01)
+    ap.add_argument("--q", type=int, default=20, help="FD directions per step")
+    ap.add_argument("--features", type=int, default=1000, help="RFF features M")
+    ap.add_argument("--traj-cap", type=int, default=192)
+    ap.add_argument("--lengthscale", type=float, default=0.5,
+                    help="GP/RFF kernel lengthscale (AlgoConfig.lengthscale)")
+    ap.add_argument("--gp-noise", "--noise", dest="gp_noise", type=float, default=1e-5,
+                    help="GP observation-noise variance (AlgoConfig.noise)")
+    ap.add_argument("--gamma-mode", default="inv_t", choices=["inv_t", "const"],
+                    help="correction-length schedule (Cor. C.1 practical choice)")
+    ap.add_argument("--gamma-const", type=float, default=1.0,
+                    help="gamma value when --gamma-mode const")
+    ap.add_argument("--no-factor-cache", action="store_true",
+                    help="seed eigh-from-scratch surrogate path (equivalence oracle)")
+    ap.add_argument("--no-defer-repair", action="store_true",
+                    help="inline clamped-eigh fallback per append event "
+                         "(PR 2 engine, the deferred-repair equivalence oracle)")
+
+
+def add_engine_flags(ap: argparse.ArgumentParser) -> None:
+    """Round-driver knobs shared by the launcher and benchmark configs."""
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rounds per on-device scan chunk (core/rounds.py); "
+                         "0 = legacy one-dispatch-per-round loop")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="chunk-boundary checkpoint/resume dir (scan driver)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate global F only every k-th round (+ final); "
+                         "skipped history rows hold NaN")
+
+
+def config_from_args(args: argparse.Namespace, *, dim: int,
+                     n_clients: int) -> alg.AlgoConfig:
+    """Build AlgoConfig from flags installed by ``add_algo_flags``."""
+    kw = {field: getattr(args, flag) for flag, field in _FLAG_FIELDS.items()}
+    if getattr(args, "no_factor_cache", False):
+        kw["use_factor_cache"] = False
+    if getattr(args, "no_defer_repair", False):
+        kw["defer_repair"] = False
+    return make_config(kw.pop("name"), dim=dim, n_clients=n_clients, **kw)
+
+
+def make_config(name: str, *, dim: int, n_clients: int,
+                **overrides) -> alg.AlgoConfig:
+    """Programmatic twin of ``config_from_args`` (benchmarks, tests).
+
+    Unknown override keys raise immediately (AlgoConfig is frozen), so a
+    benchmark config cannot silently drift from the AlgoConfig surface.
+    """
+    return alg.AlgoConfig(name=name, dim=dim, n_clients=n_clients, **overrides)

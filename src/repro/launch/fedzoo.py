@@ -31,6 +31,7 @@ from repro.core import algorithms as alg
 from repro.core import model_objectives as mobj
 from repro.core import objectives as obj
 from repro.core.federated import run_distributed
+from repro.launch import common
 from repro.launch.mesh import make_host_mesh
 
 
@@ -62,7 +63,6 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--objective", default="quadratic",
                     choices=["quadratic", "sinquad", "attack", "metric", "lm"])
-    ap.add_argument("--algo", default="fzoos", choices=list(alg.ALGORITHMS))
     ap.add_argument("--arch", default="qwen1_5_0_5b",
                     choices=[a.replace("_", "-") for a in ARCH_IDS] + list(ARCH_IDS))
     ap.add_argument("--dim", type=int, default=300)
@@ -71,27 +71,11 @@ def main() -> None:
     ap.add_argument("--p-shared", type=float, default=0.5, help="P for attack/metric")
     ap.add_argument("--noise-std", type=float, default=0.001)
     ap.add_argument("--rounds", type=int, default=50)
-    ap.add_argument("--local-steps", type=int, default=10)
-    ap.add_argument("--eta", type=float, default=0.01)
-    ap.add_argument("--q", type=int, default=20)
-    ap.add_argument("--features", type=int, default=1000)
-    ap.add_argument("--traj-cap", type=int, default=192)
-    ap.add_argument("--lengthscale", type=float, default=0.5,
-                    help="GP/RFF kernel lengthscale (AlgoConfig.lengthscale)")
-    ap.add_argument("--gp-noise", "--noise", dest="gp_noise", type=float, default=1e-5,
-                    help="GP observation-noise variance (AlgoConfig.noise)")
-    ap.add_argument("--gamma-mode", default="inv_t", choices=["inv_t", "const"],
-                    help="correction-length schedule (Cor. C.1 practical choice)")
-    ap.add_argument("--gamma-const", type=float, default=1.0,
-                    help="gamma value when --gamma-mode const")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="shard clients over the local device mesh via shard_map")
-    ap.add_argument("--chunk", type=int, default=None,
-                    help="rounds per on-device scan chunk (core/rounds.py); "
-                         "0 = legacy one-dispatch-per-round loop")
-    ap.add_argument("--ckpt-dir", default="",
-                    help="chunk-boundary checkpoint/resume dir (scan driver)")
+    common.add_algo_flags(ap)  # the shared AlgoConfig flag surface
+    common.add_engine_flags(ap)  # --chunk / --ckpt-dir / --eval-every
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(args.seed)
@@ -99,13 +83,7 @@ def main() -> None:
     cobjs, query, global_value, dim = build_objective(args, kobj)
     print(f"objective={args.objective} dim={dim} clients={args.clients} algo={args.algo}")
 
-    cfg = alg.AlgoConfig(
-        name=args.algo, dim=dim, n_clients=args.clients, eta=args.eta,
-        local_steps=args.local_steps, q=args.q, n_features=args.features,
-        traj_capacity=args.traj_cap, lengthscale=args.lengthscale,
-        noise=args.gp_noise, gamma_mode=args.gamma_mode,
-        gamma_const=args.gamma_const,
-    )
+    cfg = common.config_from_args(args, dim=dim, n_clients=args.clients)
     print(f"queries/round/client = {cfg.queries_per_round()}  "
           f"uplink floats/round/client = {cfg.comm_floats_per_round()}")
 
@@ -114,14 +92,16 @@ def main() -> None:
     if args.distributed:
         mesh = make_host_mesh()
         res = run_distributed(cfg, mesh, krun, cobjs, query, global_value,
-                              args.rounds, chunk=args.chunk, checkpoint_dir=ckpt)
+                              args.rounds, chunk=args.chunk, checkpoint_dir=ckpt,
+                              eval_every=args.eval_every)
     else:
         res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds,
-                           chunk=args.chunk, checkpoint_dir=ckpt)
+                           chunk=args.chunk, checkpoint_dir=ckpt,
+                           eval_every=args.eval_every)
     dt = time.time() - t0
 
     f = res.f_values
-    best = float(jnp.min(f))
+    best = float(jnp.nanmin(f))  # eval-every leaves NaN rows for skipped rounds
     print(f"F(x_0) = {float(f[0]):+.5f}   F(x_R) = {float(f[-1]):+.5f}   "
           f"best = {best:+.5f}   ({dt:.1f}s, "
           f"{args.rounds / max(dt, 1e-9):.1f} rounds/s)")

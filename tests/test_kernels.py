@@ -159,6 +159,94 @@ def test_gp_kernels_match_surrogate_math():
     np.testing.assert_allclose(np.asarray(g_fast), np.asarray(g_direct), atol=1e-5)
 
 
+CLIENT_SHAPES = [
+    (1, 4, 3, 16),     # single client (the per-device distributed shape)
+    (3, 64, 8, 64),    # block-aligned candidates
+    (8, 100, 20, 128), # the paper's active-query shape, 8 clients
+    (5, 130, 5, 96),   # misaligned candidate count
+]
+
+
+def _gp_data_clients(nb, n, d, cap, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cands = jax.random.uniform(jax.random.fold_in(key, 0), (nb, n, d))
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (nb, cap, d))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (nb, cap, cap)) / np.sqrt(cap)
+    binv = jnp.einsum("bij,bkj->bik", a, a) + 0.1 * jnp.eye(cap)
+    pmat = binv * jnp.einsum("bcd,bkd->bck", xs, xs)
+    alpha = jax.random.normal(jax.random.fold_in(key, 3), (nb, cap))
+    return cands, xs, binv, pmat, alpha
+
+
+@pytest.mark.parametrize("nb,n,d,cap", CLIENT_SHAPES)
+def test_uncertainty_scores_clients_kernel(nb, n, d, cap):
+    """Client-batched kernel == batched oracle == vmap of the single-client
+    oracle (the client grid dimension is a pure layout change)."""
+    cands, xs, binv, pmat, _ = _gp_data_clients(nb, n, d, cap)
+    got = ops.uncertainty_scores_clients(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=64, force_pallas=True,
+    )
+    want = ref.uncertainty_scores_clients(cands, xs, binv, pmat, 0.8, d / 0.64)
+    single = jax.vmap(lambda c, x, b, p: ref.uncertainty_scores(c, x, b, p, 0.8, d / 0.64))(
+        cands, xs, binv, pmat)
+    assert got.shape == want.shape == (nb, n)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(want) / scale, np.asarray(single) / scale, atol=5e-5)
+
+
+@pytest.mark.parametrize("nb,n,d,cap", CLIENT_SHAPES)
+def test_grad_mean_clients_kernel(nb, n, d, cap):
+    cands, xs, _, _, alpha = _gp_data_clients(nb, n, d, cap)
+    got = ops.grad_mean_clients(
+        cands, xs, alpha, lengthscale=0.8, block_n=64, force_pallas=True
+    )
+    want = ref.grad_mean_clients(cands, xs, alpha, 0.8)
+    single = jax.vmap(lambda c, x, a: ref.grad_mean_batch(c, x, a, 0.8))(cands, xs, alpha)
+    assert got.shape == want.shape == (nb, n, d)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(want) / scale, np.asarray(single) / scale, atol=5e-5)
+
+
+def test_clients_kernels_candidate_padding_invariance():
+    """The per-client candidate axis is zero-padded to the block multiple;
+    padded rows yield junk that must be sliced away, and the client axis is
+    NEVER padded (it is a grid dimension, any N launches)."""
+    nb, n, d, cap = 3, 37, 6, 32  # n far from the 64 block
+    cands, xs, binv, pmat, alpha = _gp_data_clients(nb, n, d, cap, seed=7)
+    got = ops.uncertainty_scores_clients(
+        cands, xs, binv, pmat, lengthscale=0.9, prior=d / 0.81,
+        block_n=64, force_pallas=True,
+    )
+    assert got.shape == (nb, n)
+    assert bool(jnp.isfinite(got).all())
+    want = ref.uncertainty_scores_clients(cands, xs, binv, pmat, 0.9, d / 0.81)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=5e-5)
+    g_got = ops.grad_mean_clients(cands, xs, alpha, lengthscale=0.9,
+                                  block_n=64, force_pallas=True)
+    g_want = ref.grad_mean_clients(cands, xs, alpha, 0.9)
+    gs = max(float(jnp.abs(g_want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(g_got) / gs, np.asarray(g_want) / gs, atol=5e-5)
+
+
+def test_clients_kernels_traced_hyper_fall_back_to_oracle():
+    cands, xs, binv, pmat, _ = _gp_data_clients(2, 16, 4, 32)
+
+    @jax.jit
+    def scores(ls):
+        return ops.uncertainty_scores_clients(
+            cands, xs, binv, pmat, lengthscale=ls, prior=4.0 / ls**2,
+            force_pallas=True,
+        )
+
+    got = scores(jnp.asarray(0.8))
+    want = ref.uncertainty_scores_clients(cands, xs, binv, pmat, 0.8, 4.0 / 0.64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_gp_kernels_traced_hyper_fall_back_to_oracle():
     """Traced lengthscale (e.g. inside the jitted round loop) must not
     attempt to bake a tracer into the Pallas program."""

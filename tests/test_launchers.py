@@ -51,6 +51,53 @@ def test_fedzoo_cli_smoke_quadratic(monkeypatch, capsys, extra):
     assert "round    7" in out  # final round always shown
 
 
+def test_launch_common_config_from_args_round_trip():
+    """The shared flag builder (launch/common.py) maps every flag onto its
+    AlgoConfig field -- the single source the launcher AND the benchmark
+    configs go through, so there is no drift surface left."""
+    import argparse
+
+    from repro.launch import common
+
+    ap = argparse.ArgumentParser()
+    common.add_algo_flags(ap)
+    common.add_engine_flags(ap)
+    args = ap.parse_args([
+        "--algo", "fzoos", "--local-steps", "3", "--eta", "0.02", "--q", "4",
+        "--features", "32", "--traj-cap", "24", "--lengthscale", "0.7",
+        "--gp-noise", "1e-4", "--gamma-mode", "const", "--gamma-const", "0.5",
+        "--no-defer-repair", "--eval-every", "4",
+    ])
+    cfg = common.config_from_args(args, dim=6, n_clients=3)
+    assert cfg.name == "fzoos" and cfg.dim == 6 and cfg.n_clients == 3
+    assert cfg.local_steps == 3 and cfg.eta == 0.02 and cfg.q == 4
+    assert cfg.n_features == 32 and cfg.traj_capacity == 24
+    assert cfg.lengthscale == 0.7 and cfg.noise == 1e-4
+    assert cfg.gamma_mode == "const" and cfg.gamma_const == 0.5
+    assert cfg.defer_repair is False and cfg.use_factor_cache is True
+    assert args.eval_every == 4
+
+    # defaults keep the deferred engine on
+    cfg2 = common.config_from_args(ap.parse_args([]), dim=4, n_clients=2)
+    assert cfg2.defer_repair is True and cfg2.deferred
+
+    # programmatic twin rejects drifted keys loudly
+    with pytest.raises(TypeError):
+        common.make_config("fzoos", dim=4, n_clients=2, not_a_field=1)
+
+
+def test_fedzoo_cli_eval_every(monkeypatch, capsys):
+    """--eval-every skips the global eval on off-rounds (NaN in the table)
+    but always evaluates the final round."""
+    argv = ["--objective", "quadratic", "--dim", "4", "--clients", "2",
+            "--rounds", "5", "--local-steps", "1", "--features", "8",
+            "--traj-cap", "8", "--eval-every", "5", "--chunk", "5"]
+    _run_main(monkeypatch, fedzoo_launch, argv)
+    out = capsys.readouterr().out
+    assert "round    5" in out
+    assert "nan" in out  # skipped rounds visible as NaN rows
+
+
 def test_fedzoo_cli_final_round_not_on_stride(monkeypatch, capsys):
     """rounds=25 -> stride 2: the seed table stopped at 24."""
     argv = ["--objective", "quadratic", "--dim", "4", "--clients", "2",

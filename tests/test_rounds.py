@@ -144,6 +144,63 @@ def test_resume_rejects_mismatched_rounds(quad, tmp_path):
                      obj.quadratic_global_value, 6, chunk=2, checkpoint_dir=ckpt)
 
 
+def test_eval_every_nan_contract(quad):
+    """eval_every=k: F evaluated at rounds k, 2k, ... plus ALWAYS the final
+    round; skipped rows hold NaN; everything else (xs, queries) unaffected."""
+    cfg = alg.AlgoConfig(name="fedzo", dim=8, n_clients=4, local_steps=1, q=2)
+    k = jax.random.PRNGKey(3)
+    args = (cfg, k, quad, obj.quadratic_query, obj.quadratic_global_value, 7)
+    r_all = alg.simulate(*args, chunk=3)
+    r_skip = alg.simulate(*args, chunk=3, eval_every=3)
+
+    f = np.asarray(r_skip.f_values)
+    evaluated = {0, 3, 6, 7}  # round 0, multiples of 3, and the final round
+    for r in range(8):
+        if r in evaluated:
+            assert np.isfinite(f[r]), r
+            np.testing.assert_allclose(f[r], np.asarray(r_all.f_values)[r],
+                                       atol=1e-6)
+        else:
+            assert np.isnan(f[r]), r
+    # the trajectory itself must be untouched by skipping evals
+    np.testing.assert_array_equal(np.asarray(r_all.xs), np.asarray(r_skip.xs))
+    np.testing.assert_array_equal(np.asarray(r_all.queries),
+                                  np.asarray(r_skip.queries))
+
+
+def test_eval_every_matches_loop_oracle(quad):
+    """Scan-engine eval_every == the Python-loop oracle's NaN pattern."""
+    cfg = alg.AlgoConfig(name="fedzo", dim=8, n_clients=4, local_steps=1, q=2)
+    k = jax.random.PRNGKey(3)
+    args = (cfg, k, quad, obj.quadratic_query, obj.quadratic_global_value, 5)
+    r_loop = alg.simulate(*args, chunk=0, eval_every=2)
+    r_scan = alg.simulate(*args, chunk=2, eval_every=2)
+    np.testing.assert_array_equal(np.isnan(np.asarray(r_loop.f_values)),
+                                  np.isnan(np.asarray(r_scan.f_values)))
+    np.testing.assert_allclose(np.asarray(r_loop.f_values),
+                               np.asarray(r_scan.f_values), atol=1e-5)
+
+
+def test_eval_every_distributed(quad):
+    """eval_every through shard_map: the pmean inside the eval cond must
+    lower and the NaN pattern must match the sim engine."""
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = _fzoos_cfg(local_steps=2)
+    k = jax.random.PRNGKey(5)
+    r = run_distributed(cfg, mesh, k, quad, obj.quadratic_query,
+                        obj.quadratic_global_value, 5, chunk=2, eval_every=2)
+    f = np.asarray(r.f_values)
+    assert np.isnan(f[[1, 3]]).all()
+    assert np.isfinite(f[[0, 2, 4, 5]]).all()
+
+
+def test_eval_every_rejected_when_invalid(quad):
+    cfg = _fzoos_cfg()
+    with pytest.raises(ValueError, match="eval_every"):
+        alg.simulate(cfg, jax.random.PRNGKey(1), quad, obj.quadratic_query,
+                     obj.quadratic_global_value, 2, eval_every=0)
+
+
 def test_history_shapes_and_initial_row(quad):
     """xs[0]/f_values[0] hold the initial point; per-round rows line up."""
     cfg = alg.AlgoConfig(name="fedzo", dim=8, n_clients=4, local_steps=2, q=4)
