@@ -44,7 +44,7 @@ MODULES = {
 
 
 #: key-name suffix/substring -> metric direction for --compare.
-_LOWER_BETTER = ("_us", "_ms", "ms_per_round")
+_LOWER_BETTER = ("_us", "_ms", "ms_per_round", "ms_per_boundary")
 _HIGHER_BETTER = ("per_sec", "speedup")
 
 

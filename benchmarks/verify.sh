@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI smoke gate: tier-1 tests + benchmark regression check.
+#
+#   bash benchmarks/verify.sh            # full tier-1 + bench compare
+#   BENCH_TOL=0.5 bash benchmarks/verify.sh
+#   BENCH_ONLY=rounds,kernels bash benchmarks/verify.sh
+#
+# The bench step runs `benchmarks/run.py --compare`, which diffs a fresh
+# quick-mode run against the COMMITTED BENCH_*.json files and exits nonzero
+# on any perf metric regressing by more than BENCH_TOL (relative) -- so a
+# perf regression fails the PR instead of silently overwriting the JSONs.
+# The default tolerance is deliberately loose (50%): CI boxes are noisy and
+# the gate is for catching engine-level regressions, not 5% drift.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+BENCH_TOL="${BENCH_TOL:-0.5}"
+BENCH_ONLY="${BENCH_ONLY:-rounds,kernels}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== benchmark regression gate (--only ${BENCH_ONLY}, tol ${BENCH_TOL}) =="
+python -m benchmarks.run --only "${BENCH_ONLY}" --compare --compare-tol "${BENCH_TOL}"
+
+echo "verify: OK"

@@ -1,9 +1,12 @@
 from repro.checkpoint.io import (  # noqa: F401
+    AsyncCheckpointWriter,
     latest_step,
+    prepare_round_state,
     restore,
     restore_round_state,
     restore_train_state,
     save,
     save_round_state,
     save_train_state,
+    write_round_state,
 )

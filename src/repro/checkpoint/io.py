@@ -1,10 +1,34 @@
 """Pytree checkpointing to .npz with a JSON treedef sidecar (no orbax in the
 environment).
 
-Layout:  <dir>/step_<N>/arrays.npz + meta.json
-Arbitrary pytrees (flat dicts, NamedTuples, nested) round-trip through
-``jax.tree_util`` flattening; bfloat16 leaves are stored as uint16 views with
-a dtype tag so numpy's npz (which lacks bf16) stays lossless.
+Two layouts (DESIGN.md Sec. 3):
+
+* **single** (the default):  ``<dir>/step_<N>/arrays.npz + meta.json`` --
+  every leaf fully gathered to one host file.  Arbitrary pytrees (flat
+  dicts, NamedTuples, nested) round-trip through ``jax.tree_util``
+  flattening; bfloat16 leaves are stored as uint16 views with a dtype tag so
+  numpy's npz (which lacks bf16) stays lossless.
+* **sharded** (round-state checkpoints with a mesh):
+  ``<dir>/step_<N>/meta.json + shard_<p>/{arrays.npz, shard.json}`` -- one
+  shard file per *process*, written from process-local addressable data
+  (``Array.addressable_shards``), so no process ever gathers the full
+  client-sharded ``ClientState``.  ``meta.json`` is the manifest: it records
+  {layout, n_shards, mesh axis names+shape, per-group treedef/dtypes} and
+  restore validates all of it loudly, so a checkpoint taken on one topology
+  cannot silently restore onto another.  Replicated history buffers ride in
+  every shard file (they are process-local by definition).
+
+Both layouts write into a ``.tmp`` sibling directory and rename into place,
+so a preemption mid-write leaves only a ``*.tmp`` directory that
+``latest_step`` never matches and resume falls back to the last COMPLETE
+checkpoint.
+
+For boundary pipelining, saving is split into ``prepare_round_state`` (ALL
+device reads happen here, synchronously, before the caller donates the live
+buffers to the next chunk executable) and ``write_round_state`` (pure file
+I/O on host numpy arrays -- safe to run on a background thread while the
+next chunk computes).  ``AsyncCheckpointWriter`` is the single-worker thread
+driving that overlap.
 """
 
 from __future__ import annotations
@@ -13,26 +37,84 @@ import json
 import os
 import re
 import shutil
-from typing import Any
+import threading
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _BF16 = "bfloat16"
+_SHARDED_LAYOUT = "sharded-v1"
 
 
-def _to_numpy(x) -> tuple[np.ndarray, str]:
-    arr = np.asarray(jax.device_get(x))
+def _np_tag(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """Tag an ALREADY-host numpy array (no device read)."""
     if str(arr.dtype) == _BF16:
         return arr.view(np.uint16), _BF16
     return arr, str(arr.dtype)
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    return _np_tag(np.asarray(jax.device_get(x)))
 
 
 def _from_numpy(arr: np.ndarray, tag: str):
     if tag == _BF16:
         return jnp.asarray(arr.view(jnp.bfloat16))
     return jnp.asarray(arr)
+
+
+def _np_from_tag(arr: np.ndarray, tag: str) -> np.ndarray:
+    """Stored npz entry -> host numpy array with the recorded dtype."""
+    if tag == _BF16:
+        return arr.view(jnp.bfloat16)  # ml_dtypes bf16 is a numpy dtype
+    return arr
+
+
+def _check_leaf(i: int, got_shape, got_tag: str, want) -> None:
+    """Shape AND dtype validation of one restored leaf against the template.
+
+    The docstring of ``restore`` always promised dtype validation; without it
+    a leaf saved as bf16 silently restored into an f32 template (the caller
+    then mixed precisions downstream).  Fail loudly instead.
+    """
+    if tuple(got_shape) != tuple(want.shape):
+        raise ValueError(
+            f"shape mismatch at leaf {i}: checkpoint {tuple(got_shape)} vs "
+            f"template {tuple(want.shape)}"
+        )
+    want_tag = str(want.dtype)
+    if got_tag != want_tag:
+        raise ValueError(
+            f"dtype mismatch at leaf {i}: checkpoint holds {got_tag}, "
+            f"template wants {want_tag}"
+        )
+
+
+def _flatten_to_host(tree: Any) -> tuple[dict, dict]:
+    """(npz arrays, meta) for one pytree -- the device_get half of a save."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays, tags = {}, []
+    for i, leaf in enumerate(leaves):
+        arr, tag = _to_numpy(leaf)
+        arrays[f"leaf_{i}"] = arr
+        tags.append(tag)
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "dtypes": tags}
+    return arrays, meta
+
+
+def _write_step_dir(path: str, populate: Callable[[str], None]) -> str:
+    """Atomic-ish write: populate a ``.tmp`` sibling, then rename into place."""
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    populate(tmp)
+    if os.path.isdir(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
 
 
 def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None = None) -> str:
@@ -42,28 +124,18 @@ def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None 
     checkpoint instead of dying on a truncated one."""
     if step is not None:
         path = os.path.join(path, f"step_{step:08d}")
-    tmp = path + ".tmp"
-    if os.path.isdir(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    arrays, tags = {}, []
-    for i, leaf in enumerate(leaves):
-        arr, tag = _to_numpy(leaf)
-        arrays[f"leaf_{i}"] = arr
-        tags.append(tag)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "dtypes": tags}
+    arrays, meta = _flatten_to_host(tree)
     if step is not None:
         meta["step"] = step
     if extra_meta:
         meta["extra"] = extra_meta
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f)
-    if os.path.isdir(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
-    return path
+
+    def populate(tmp: str) -> None:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+
+    return _write_step_dir(path, populate)
 
 
 def restore(path: str, like: Any, step: int | None = None) -> Any:
@@ -78,12 +150,12 @@ def restore(path: str, like: Any, step: int | None = None) -> Any:
         raise ValueError(
             f"checkpoint has {meta['n_leaves']} leaves, template has {len(leaves_like)}"
         )
-    leaves = [
-        _from_numpy(data[f"leaf_{i}"], meta["dtypes"][i]) for i in range(meta["n_leaves"])
-    ]
-    for got, want in zip(leaves, leaves_like):
-        if tuple(got.shape) != tuple(want.shape):
-            raise ValueError(f"shape mismatch {got.shape} vs {want.shape}")
+    leaves = []
+    for i, want in enumerate(leaves_like):
+        raw, tag = data[f"leaf_{i}"], meta["dtypes"][i]
+        got = _np_from_tag(raw, tag)
+        _check_leaf(i, got.shape, str(got.dtype), want)
+        leaves.append(_from_numpy(raw, tag))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -112,25 +184,327 @@ def restore_train_state(root: str, params_like, opt_like, step: int | None = Non
 
 
 def load_meta(root: str, step: int) -> dict:
-    """The meta.json sidecar of one checkpoint (treedef, dtypes, extra)."""
+    """The meta.json sidecar of one checkpoint (treedef, dtypes, extra).
+    Works for both layouts: the sharded manifest IS the step's meta.json."""
     with open(os.path.join(root, f"step_{step:08d}", "meta.json")) as f:
         return json.load(f)
 
 
+# ---------------------------------------------------------------------------
+# Round-state checkpoints (core/rounds.py): single + per-shard layouts
+# ---------------------------------------------------------------------------
+
+
+def _client_shardings(mesh):
+    """(client-sharded, replicated) NamedShardings for round-state trees."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    # deferred import: checkpoint io must not pull the whole algorithm
+    # stack in at module import time, but the client-axis definition must
+    # stay single-sourced with the engine that wrote the state
+    from repro.core.federated import client_axes
+
+    return (NamedSharding(mesh, P(client_axes(mesh))),
+            NamedSharding(mesh, P()))
+
+
+def _local_block(arr: jax.Array) -> tuple[np.ndarray, int, int]:
+    """The process-local rows of a leading-axis-sharded array as ONE
+    contiguous host block -- reads only ``addressable_shards``, never the
+    global array, so no cross-process gather is issued.  Returns
+    (block, row_start, row_stop).  Duplicate row ranges (replication across
+    a non-client mesh axis) are read once."""
+    uniq: dict[tuple[int, int], Any] = {}
+    n_rows = arr.shape[0]
+    for s in arr.addressable_shards:
+        sl = s.index[0] if s.index else slice(None)
+        start = sl.start if sl.start is not None else 0
+        stop = sl.stop if sl.stop is not None else n_rows
+        uniq.setdefault((int(start), int(stop)), s.data)
+    spans = sorted(uniq)
+    lo, expect, parts = spans[0][0], spans[0][0], []
+    for start, stop in spans:
+        if start != expect:
+            raise ValueError(
+                f"addressable shard rows are not contiguous: gap at row {expect} "
+                f"(next shard starts at {start}); per-shard checkpointing "
+                "assumes block sharding of the client axis"
+            )
+        parts.append(np.asarray(jax.device_get(uniq[(start, stop)])))
+        expect = stop
+    block = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+    return block, lo, expect
+
+
+def _sync(tag: str) -> None:
+    """Cross-process barrier; a no-op in single-process runs (the test and
+    CPU path).  Multi-process runs order shard writes vs the process-0
+    manifest rename through it."""
+    if jax.process_count() > 1:  # pragma: no cover - multi-process pods only
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(f"repro-ckpt-{tag}")
+
+
+def prepare_round_state(states, history, mesh=None) -> dict:
+    """Host-side snapshot of a round-state checkpoint.
+
+    ALL device reads happen here (synchronously -- the caller is about to
+    donate the live buffers to the next chunk executable, so the snapshot
+    must complete first); the returned payload is plain numpy + JSON and
+    ``write_round_state`` can persist it from a background thread.
+
+    ``mesh=None`` produces the single-file layout.  With a mesh, each
+    process reads only its addressable shard of the client-sharded
+    ``states`` leaves (no full gather) plus the replicated ``history``.
+    """
+    if mesh is None:
+        arrays, meta = _flatten_to_host({"states": states, "hist": history})
+        return {"layout": "single", "arrays": arrays, "meta": meta}
+
+    s_leaves, s_def = jax.tree_util.tree_flatten(states)
+    h_leaves, h_def = jax.tree_util.tree_flatten(history)
+    arrays: dict[str, np.ndarray] = {}
+    s_tags: list[str] = []
+    rows: Optional[tuple[int, int]] = None
+    for i, leaf in enumerate(s_leaves):
+        block, lo, hi = _local_block(leaf)
+        arr, tag = _np_tag(block)
+        arrays[f"states_{i}"] = arr
+        s_tags.append(tag)
+        if rows is None:
+            rows = (lo, hi)
+        elif rows != (lo, hi):
+            raise ValueError(
+                f"inconsistent addressable rows across states leaves: "
+                f"{rows} vs {(lo, hi)} at leaf {i}"
+            )
+    h_tags: list[str] = []
+    for i, leaf in enumerate(h_leaves):
+        arr, tag = _to_numpy(leaf)
+        arrays[f"hist_{i}"] = arr
+        h_tags.append(tag)
+    manifest = {
+        "layout": _SHARDED_LAYOUT,
+        "n_shards": jax.process_count(),
+        "mesh": {
+            "axis_names": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        },
+        "states": {
+            "treedef": str(s_def),
+            "n_leaves": len(s_leaves),
+            "dtypes": s_tags,
+            "global_rows": int(s_leaves[0].shape[0]),
+        },
+        "hist": {"treedef": str(h_def), "n_leaves": len(h_leaves), "dtypes": h_tags},
+    }
+    shard_meta = {
+        "shard": jax.process_index(),
+        "row_start": int(rows[0]),
+        "row_stop": int(rows[1]),
+    }
+    return {
+        "layout": "sharded",
+        "arrays": arrays,
+        "manifest": manifest,
+        "shard_meta": shard_meta,
+    }
+
+
+def write_round_state(root: str, round_idx: int, payload: dict,
+                      extra_meta: dict | None = None) -> str:
+    """Persist a ``prepare_round_state`` payload: pure file I/O, no device
+    access -- safe on a background thread (``AsyncCheckpointWriter``)."""
+    path = os.path.join(root, f"step_{round_idx:08d}")
+    if payload["layout"] == "single":
+        meta = dict(payload["meta"])
+        meta["step"] = round_idx
+        if extra_meta:
+            meta["extra"] = extra_meta
+
+        def populate(tmp: str) -> None:
+            np.savez(os.path.join(tmp, "arrays.npz"), **payload["arrays"])
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+
+        return _write_step_dir(path, populate)
+
+    # -- sharded layout: every process writes its own shard dir; process 0
+    # writes the manifest and performs the rename after all shards landed.
+    tmp = path + ".tmp"
+    if jax.process_index() == 0 and os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    _sync(f"clean-{round_idx}")
+    sdir = os.path.join(tmp, f"shard_{payload['shard_meta']['shard']:05d}")
+    os.makedirs(sdir, exist_ok=True)  # exist_ok: concurrent process creation
+    np.savez(os.path.join(sdir, "arrays.npz"), **payload["arrays"])
+    with open(os.path.join(sdir, "shard.json"), "w") as f:
+        json.dump(payload["shard_meta"], f)
+    _sync(f"shards-{round_idx}")
+    if jax.process_index() == 0:
+        manifest = dict(payload["manifest"])
+        manifest["step"] = round_idx
+        if extra_meta:
+            manifest["extra"] = extra_meta
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    _sync(f"renamed-{round_idx}")
+    return path
+
+
 def save_round_state(root: str, round_idx: int, states, history,
-                     extra_meta: dict | None = None) -> str:
+                     extra_meta: dict | None = None, mesh=None) -> str:
     """Chunk-boundary checkpoint of the scan engine (core/rounds.py):
     the stacked ClientState plus the preallocated SimResult history buffers,
-    keyed by the number of completed rounds."""
-    return save(root, {"states": states, "hist": history}, step=round_idx,
-                extra_meta=extra_meta)
+    keyed by the number of completed rounds.  With ``mesh`` the per-shard
+    layout is used (see module docstring); without, the single-file one."""
+    payload = prepare_round_state(states, history, mesh=mesh)
+    return write_round_state(root, round_idx, payload, extra_meta=extra_meta)
 
 
-def restore_round_state(root: str, states_like, hist_like, step: int | None = None):
-    """Inverse of save_round_state; returns (states, history, round_idx)."""
+def _validate_manifest(meta: dict, mesh) -> None:
+    """Loud topology identity check: a sharded checkpoint only restores onto
+    the shard count and mesh it was written from."""
+    if meta.get("n_shards") != jax.process_count():
+        raise ValueError(
+            f"sharded checkpoint was written by {meta.get('n_shards')} "
+            f"process(es), cannot restore with {jax.process_count()}"
+        )
+    want = {
+        "axis_names": list(mesh.axis_names),
+        "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+    }
+    if meta.get("mesh") != want:
+        raise ValueError(
+            f"sharded checkpoint was written on mesh {meta.get('mesh')}, "
+            f"cannot restore onto {want}"
+        )
+
+
+def _place_sharded(block: np.ndarray, want, sharding, row_start: int,
+                   row_stop: int) -> jax.Array:
+    """Place one process-local block directly onto this process's devices
+    (``make_array_from_single_device_arrays``) -- the restore-side analogue
+    of the gather-free save."""
+    gshape = tuple(want.shape)
+    per_dev = []
+    for dev, idx in sharding.addressable_devices_indices_map(gshape).items():
+        sl = idx[0] if idx else slice(None)
+        lo = sl.start if sl.start is not None else 0
+        hi = sl.stop if sl.stop is not None else gshape[0]
+        if lo < row_start or hi > row_stop:
+            raise ValueError(
+                f"shard file covers rows [{row_start}, {row_stop}) but device "
+                f"{dev} wants [{lo}, {hi}); the checkpoint does not match this "
+                "process's client placement"
+            )
+        per_dev.append(jax.device_put(block[lo - row_start : hi - row_start], dev))
+    return jax.make_array_from_single_device_arrays(gshape, sharding, per_dev)
+
+
+def restore_round_state(root: str, states_like, hist_like, step: int | None = None,
+                        mesh=None):
+    """Inverse of save_round_state; returns (states, history, round_idx).
+
+    Reads the step's meta.json to dispatch on layout, so legacy single-file
+    round checkpoints keep restoring (the caller re-shards them); sharded
+    checkpoints require ``mesh``, validate the manifest topology, and place
+    each process's block straight onto its devices without materializing the
+    global state on any host.
+    """
     if step is None:
         step = latest_step(root)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {root}")
-    tree = restore(root, {"states": states_like, "hist": hist_like}, step=step)
-    return tree["states"], tree["hist"], step
+    meta = load_meta(root, step)
+    if meta.get("layout") != _SHARDED_LAYOUT:
+        tree = restore(root, {"states": states_like, "hist": hist_like}, step=step)
+        return tree["states"], tree["hist"], step
+
+    if mesh is None:
+        raise ValueError(
+            f"checkpoint step {step} under {root!r} uses the per-shard layout; "
+            "restoring it requires the device mesh it was written on"
+        )
+    _validate_manifest(meta, mesh)
+    cshard, rshard = _client_shardings(mesh)
+    path = os.path.join(root, f"step_{step:08d}")
+    sdir = os.path.join(path, f"shard_{jax.process_index():05d}")
+    with open(os.path.join(sdir, "shard.json")) as f:
+        shard_meta = json.load(f)
+    data = np.load(os.path.join(sdir, "arrays.npz"))
+    row_start, row_stop = shard_meta["row_start"], shard_meta["row_stop"]
+
+    s_like, s_def = jax.tree_util.tree_flatten(states_like)
+    if len(s_like) != meta["states"]["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {meta['states']['n_leaves']} states leaves, "
+            f"template has {len(s_like)}"
+        )
+    s_leaves = []
+    for i, want in enumerate(s_like):
+        block = _np_from_tag(data[f"states_{i}"], meta["states"]["dtypes"][i])
+        got_shape = (meta["states"]["global_rows"],) + tuple(block.shape[1:])
+        _check_leaf(i, got_shape, str(block.dtype), want)
+        if block.shape[0] != row_stop - row_start:
+            raise ValueError(
+                f"shard rows [{row_start}, {row_stop}) disagree with stored "
+                f"block of {block.shape[0]} rows at states leaf {i}"
+            )
+        s_leaves.append(_place_sharded(block, want, cshard, row_start, row_stop))
+    states = jax.tree_util.tree_unflatten(s_def, s_leaves)
+
+    h_like, h_def = jax.tree_util.tree_flatten(hist_like)
+    if len(h_like) != meta["hist"]["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {meta['hist']['n_leaves']} hist leaves, "
+            f"template has {len(h_like)}"
+        )
+    h_leaves = []
+    for i, want in enumerate(h_like):
+        got = _np_from_tag(data[f"hist_{i}"], meta["hist"]["dtypes"][i])
+        _check_leaf(i, got.shape, str(got.dtype), want)
+        h_leaves.append(jax.device_put(got, rshard))
+    hist = jax.tree_util.tree_unflatten(h_def, h_leaves)
+    return states, hist, step
+
+
+class AsyncCheckpointWriter:
+    """Single-worker background writer for chunk-boundary checkpoints.
+
+    At most one write is in flight: ``submit`` joins the previous write
+    first (so the steady-state boundary cost is the host snapshot only,
+    never two stacked writes) and re-raises any error the previous write
+    hit -- a failing checkpoint must fail the run, not be swallowed by a
+    daemon thread.  ``wait()`` drains the writer; the driver calls it before
+    returning so the final checkpoint is durable when ``run_rounds`` exits.
+    """
+
+    def __init__(self) -> None:
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _run(self, fn: Callable[[], Any]) -> None:
+        try:
+            fn()
+        except BaseException as e:  # noqa: BLE001 - re-raised on the main thread
+            self._error = e
+
+    def submit(self, fn: Callable[[], Any]) -> None:
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._run, args=(fn,), name="repro-ckpt-writer", daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

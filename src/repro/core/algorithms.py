@@ -581,6 +581,7 @@ def simulate(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     eval_every: int = 1,
+    async_checkpoint: bool = True,
 ) -> SimResult:
     """Run R communication rounds in a single process (clients via vmap).
 
@@ -590,9 +591,10 @@ def simulate(
     ``chunk=k>0`` sets the chunk length; ``chunk=0`` keeps the seed
     one-dispatch-per-round Python loop as the equivalence oracle.
     ``checkpoint_dir`` (scan driver only) enables chunk-boundary
-    checkpoint/resume of the run.  ``eval_every=k`` evaluates the (possibly
-    expensive) ``global_value_fn`` only every k-th round plus the final one;
-    skipped ``f_values`` rows hold NaN (see SimResult).
+    checkpoint/resume of the run; ``async_checkpoint`` overlaps the file
+    write with the next chunk (core/rounds.py).  ``eval_every=k`` evaluates
+    the (possibly expensive) ``global_value_fn`` only every k-th round plus
+    the final one; skipped ``f_values`` rows hold NaN (see SimResult).
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
@@ -615,7 +617,7 @@ def simulate(
             cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
             rounds, chunk, diag_global_grad=diag_global_grad,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            eval_every=eval_every,
+            eval_every=eval_every, async_checkpoint=async_checkpoint,
         )
         return res
 

@@ -127,6 +127,7 @@ def run_distributed(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     eval_every: int = 1,
+    async_checkpoint: bool = True,
 ) -> alg.SimResult:
     """Distributed analogue of algorithms.simulate (same history contract).
 
@@ -136,7 +137,11 @@ def run_distributed(
     ``chunk=k>0`` sets the chunk length, ``chunk=0`` keeps the seed
     one-dispatch-per-round Python loop as the equivalence oracle.
     ``eval_every`` follows the ``simulate`` contract (skipped ``f_values``
-    rows hold NaN).
+    rows hold NaN).  Checkpoints on this path use the PER-SHARD layout
+    (checkpoint/io.py): each process writes only its addressable slice of
+    the client-sharded state, the chunk-boundary repair decision stays on
+    device, and with ``async_checkpoint`` the file write overlaps the next
+    chunk -- the steady-state boundary performs zero host syncs.
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
@@ -162,7 +167,7 @@ def run_distributed(
             cfg, rff, query_fn, cobjs, states, x0, global_value_fn,
             rounds, chunk, mesh=mesh,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            eval_every=eval_every,
+            eval_every=eval_every, async_checkpoint=async_checkpoint,
         )
         return res
 

@@ -578,6 +578,26 @@ def factor_repair_masked(factor: GramFactor, jitter: jax.Array) -> GramFactor:
     )
 
 
+def factor_repair_gated(factor: GramFactor, jitter: jax.Array) -> GramFactor:
+    """``factor_repair_masked`` behind a DEVICE-side flag-count gate.
+
+    ``factor`` leaves carry a leading client axis.  The repair decision is
+    made on device -- ``lax.cond`` on the scalar count of raised
+    ``needs_repair`` flags -- so the caller never reads the flag vector to
+    host: the all-healthy boundary (the measured ~1.0 case) costs one O(N)
+    reduction and the untaken batched-eigh branch is skipped at runtime
+    (the cond predicate is unbatched).  This is the zero-host-sync chunk
+    boundary of DESIGN.md Sec. 3; ``core.rounds.repair_flagged_clients``
+    keeps the host-read decision as the loop-driver oracle.
+    """
+    n_flagged = jnp.sum(factor.needs_repair.astype(jnp.int32))
+    return jax.lax.cond(
+        n_flagged > 0,
+        lambda: factor_repair_masked(factor, jitter),
+        lambda: factor,
+    )
+
+
 def traj_extend(
     traj: Trajectory,
     factor: GramFactor,

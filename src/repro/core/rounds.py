@@ -220,12 +220,59 @@ def make_chunk_step(chunk_fn):
 
 
 # ---------------------------------------------------------------------------
-# Deferred-repair pass (chunk boundaries; DESIGN.md Sec. 2.6)
+# Deferred-repair pass (chunk boundaries; DESIGN.md Sec. 2.6 / 3)
 # ---------------------------------------------------------------------------
 
 
 #: jitted per-(mesh, capacity) shard_map repair executables (rare-event path).
 _DIST_REPAIR_CACHE: dict = {}
+
+#: jitted per-(mesh, capacity) DEVICE-decided boundary repair executables.
+_DEVICE_REPAIR_CACHE: dict = {}
+
+
+def boundary_repair_on_device(
+    states: alg.ClientState,
+    cfg: alg.AlgoConfig,
+    mesh: Optional[Mesh] = None,
+) -> alg.ClientState:
+    """Zero-host-sync chunk boundary: the repair DECISION stays on device.
+
+    One extra (async) dispatch per chunk running
+    ``gp.factor_repair_gated`` -- a masked all-client repair under a
+    ``lax.cond`` gated on the device-side flag-count scalar -- so the
+    steady-state deferred boundary issues NO ``device_get`` of the flag
+    vector and the Python driver never stalls the dispatch pipeline.  The
+    common all-flags-clear case costs an O(N) reduction; when clients ARE
+    flagged the taken branch is the same batched clamped-eigh
+    ``factor_repair_masked`` the host-read path runs, so repaired state is
+    identical to ``repair_flagged_clients`` (tested).  On a mesh the gate
+    runs per shard inside ``shard_map`` (each shard conds on its LOCAL
+    count; no collectives).  The factor buffers are donated: the boundary
+    runs in place like the chunk step itself.
+    """
+    if not cfg.deferred:
+        return states
+    jitter = jnp.maximum(jnp.asarray(cfg.noise, jnp.float32), 1e-4)
+    key = (mesh, states.factor.gram.shape)
+    if key not in _DEVICE_REPAIR_CACHE:
+        if mesh is None:
+            fn = jax.jit(gp.factor_repair_gated, donate_argnums=0)
+        else:
+            axes = fed.client_axes(mesh)
+            cspec = P(axes)
+            fn = jax.jit(
+                shard_map(
+                    gp.factor_repair_gated,
+                    mesh=mesh,
+                    in_specs=(cspec, P()),
+                    out_specs=cspec,
+                    check_rep=False,
+                ),
+                donate_argnums=0,
+            )
+        _DEVICE_REPAIR_CACHE[key] = fn
+    return states._replace(factor=_DEVICE_REPAIR_CACHE[key](states.factor, jitter))
 
 
 def repair_flagged_clients(
@@ -235,10 +282,14 @@ def repair_flagged_clients(
 ) -> tuple[alg.ClientState, int]:
     """Repair every client flagged ``needs_repair`` by the deferred engine.
 
-    Reads the (N,)-bool flag vector to host -- the one sync the deferred
-    contract pays per chunk -- and returns unchanged states when nothing is
-    flagged (the overwhelmingly common case: the flag fires only on genuine
-    f32 indefiniteness, measured rate ~0).  When clients ARE flagged:
+    HOST-read decision path: reads the (N,)-bool flag vector to host and
+    returns unchanged states when nothing is flagged (the overwhelmingly
+    common case: the flag fires only on genuine f32 indefiniteness, measured
+    rate ~0).  Since the zero-sync boundary landed this is the ORACLE used by
+    the ``chunk=0`` loop drivers and the tests; the scan driver's steady
+    state uses ``boundary_repair_on_device`` instead, which makes the same
+    decision on device and therefore costs no sync.  When clients ARE
+    flagged:
 
       * vmap path (``mesh=None``): gather the flagged subset and run ONE
         batched clamped-eigh over exactly those Grams -- the eigh amortizes
@@ -310,6 +361,7 @@ def run_rounds(
     checkpoint_every: int = 1,
     resume: bool = True,
     eval_every: int = 1,
+    async_checkpoint: bool = True,
 ) -> tuple[alg.ClientState, alg.SimResult]:
     """Run ``rounds`` communication rounds in chunks of ``chunk`` scanned
     iterations.  Returns (final stacked ClientState, SimResult history).
@@ -319,11 +371,20 @@ def run_rounds(
     ``checkpoint_dir`` enables chunk-boundary checkpointing of
     {states, history} every ``checkpoint_every`` chunks (and at the end);
     when a checkpoint exists and ``resume`` is True the run restarts from
-    the latest saved round.  ``eval_every=k`` evaluates ``global_value_fn``
-    inside the scan only every k-th round (plus the final one); skipped
-    ``f_values`` rows hold NaN.  With ``cfg.deferred`` the loop runs the
-    chunk-boundary repair pass (``repair_flagged_clients``) between scan
-    dispatches.
+    the latest saved round.  On a mesh, checkpoints use the per-shard layout
+    (one file per process from process-local data, no full ClientState
+    gather; legacy single-file checkpoints still restore).  ``eval_every=k``
+    evaluates ``global_value_fn`` inside the scan only every k-th round
+    (plus the final one); skipped ``f_values`` rows hold NaN.
+
+    The steady-state chunk boundary is HOST-SYNC-FREE: with ``cfg.deferred``
+    the repair decision runs on device (``boundary_repair_on_device``, one
+    extra async dispatch per chunk), and checkpoint writes are split into a
+    synchronous host snapshot (required before the buffers are donated to
+    the next chunk) plus a background file write overlapped with the next
+    chunk's compute (``async_checkpoint=False`` forces the legacy blocking
+    write).  Between boundaries the Python loop therefore runs ahead of the
+    device, queueing chunk k+1 while chunk k executes.
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")
@@ -339,9 +400,14 @@ def run_rounds(
     chunk = min(chunk, max(rounds, 1))
     x0 = jnp.asarray(x0)
 
-    # Resume identity: {rounds, AlgoConfig repr} are recorded at save time
-    # and must match at resume time, so a stale/reused checkpoint dir fails
-    # loudly instead of splicing two different experiments into one history.
+    # Resume identity: {rounds, AlgoConfig repr, eval_every} are recorded at
+    # save time and must match at resume time, so a stale/reused checkpoint
+    # dir fails loudly instead of splicing two different experiments -- or
+    # two different f_values NaN patterns -- into one history.  ``chunk`` is
+    # recorded but deliberately NOT validated: it only sets dispatch
+    # granularity and boundary-repair cadence, both inside the
+    # bounded-divergence equivalence contract, so resuming with a different
+    # chunk length (e.g. shorter chunks on a slower machine) is legitimate.
     # (The initial iterate and RNG key live in the restored state itself and
     # so cannot drift; x0 passed here is ignored on resume.)
     run_meta = {"rounds": rounds, "chunk": chunk, "cfg": repr(cfg),
@@ -351,7 +417,7 @@ def run_rounds(
         latest = ckpt_io.latest_step(checkpoint_dir)
         if latest is not None:
             saved = (ckpt_io.load_meta(checkpoint_dir, latest).get("extra") or {})
-            for field in ("rounds", "cfg"):
+            for field in ("rounds", "cfg", "eval_every"):
                 if saved.get(field) not in (None, run_meta[field]):
                     raise ValueError(
                         f"checkpoint_dir {checkpoint_dir!r} holds a run with "
@@ -362,10 +428,12 @@ def run_rounds(
             # so the (possibly expensive) initial eval is skipped.
             hist_like = history_init(rounds, x0, jnp.zeros((), jnp.float32))
             states, hist, start = ckpt_io.restore_round_state(
-                checkpoint_dir, states, hist_like, step=latest
+                checkpoint_dir, states, hist_like, step=latest, mesh=mesh
             )
             start = min(start, rounds)
             if mesh is not None:
+                # No-op re-placement for shard-restored state; places legacy
+                # single-file restores (host arrays) onto the mesh.
                 states = fed.shard_clients(mesh, states)
     if hist is None:
         hist = history_init(rounds, x0, global_value_fn(cobjs, x0))
@@ -384,21 +452,46 @@ def run_rounds(
             steps[k] = make_chunk_step(cf)
         return steps[k]
 
+    # Multi-process pods force the blocking write: the sharded layout's
+    # cross-process barrier (io._sync) is a collective, and issuing it from
+    # the writer thread while the main thread dispatches the next chunk's
+    # psum could interleave collectives in inconsistent cross-process order
+    # (ROADMAP open item: validate the composition, then lift this).
+    writer = (
+        ckpt_io.AsyncCheckpointWriter()
+        if (checkpoint_dir and async_checkpoint and jax.process_count() == 1)
+        else None
+    )
     done, chunks_done = start, 0
-    while done < rounds:
-        k = min(chunk, rounds - done)
-        states, hist, sx = step_for(k)(
-            states, hist, cobjs, sx, jnp.asarray(done, jnp.int32)
-        )
-        done += k
-        chunks_done += 1
-        # Deferred-repair pass BETWEEN scan dispatches: one batched
-        # clamped-eigh over the flagged clients (no-op sync when none are).
-        states, _ = repair_flagged_clients(states, cfg, mesh=mesh)
-        if checkpoint_dir and (
-            chunks_done % max(checkpoint_every, 1) == 0 or done == rounds
-        ):
-            ckpt_io.save_round_state(checkpoint_dir, done, states, hist,
-                                     extra_meta=run_meta)
+    try:
+        while done < rounds:
+            k = min(chunk, rounds - done)
+            states, hist, sx = step_for(k)(
+                states, hist, cobjs, sx, jnp.asarray(done, jnp.int32)
+            )
+            done += k
+            chunks_done += 1
+            # Deferred-repair pass BETWEEN scan dispatches, decided ON
+            # DEVICE: no flag read, no host sync -- the loop keeps running
+            # ahead of the device (DESIGN.md Sec. 3).
+            states = boundary_repair_on_device(states, cfg, mesh=mesh)
+            if checkpoint_dir and (
+                chunks_done % max(checkpoint_every, 1) == 0 or done == rounds
+            ):
+                # Snapshot to host BEFORE the next chunk donates these
+                # buffers; the file write itself overlaps the next chunk's
+                # compute on the writer thread.
+                payload = ckpt_io.prepare_round_state(states, hist, mesh=mesh)
+                if writer is not None:
+                    writer.submit(partial(
+                        ckpt_io.write_round_state, checkpoint_dir, done,
+                        payload, run_meta,
+                    ))
+                else:
+                    ckpt_io.write_round_state(checkpoint_dir, done, payload,
+                                              extra_meta=run_meta)
+    finally:
+        if writer is not None:
+            writer.wait()
 
     return states, hist

@@ -34,8 +34,14 @@ def label_subset_partition(
     for _ in range(n_clients):
         chosen = rng.choice(classes, size=n_take, replace=False)
         idx = np.where(np.isin(labels, chosen))[0]
-        if len(idx) < min_per_client:  # degenerate draw; pad with random points
-            extra = rng.choice(len(labels), size=min_per_client - len(idx), replace=False)
+        if len(idx) < min_per_client:
+            # Degenerate draw; pad from the COMPLEMENT of the chosen points
+            # -- sampling from all points could duplicate an index already
+            # in `idx`, violating the no-duplicates-within-a-client
+            # guarantee above.
+            pool = np.setdiff1d(np.arange(len(labels)), idx)
+            take = min(min_per_client - len(idx), len(pool))
+            extra = rng.choice(pool, size=take, replace=False)
             idx = np.concatenate([idx, extra])
         out.append(np.sort(idx))
     return out

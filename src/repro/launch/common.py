@@ -69,7 +69,14 @@ def add_engine_flags(ap: argparse.ArgumentParser) -> None:
                     help="rounds per on-device scan chunk (core/rounds.py); "
                          "0 = legacy one-dispatch-per-round loop")
     ap.add_argument("--ckpt-dir", default="",
-                    help="chunk-boundary checkpoint/resume dir (scan driver)")
+                    help="chunk-boundary checkpoint/resume dir (scan driver); "
+                         "distributed runs write one shard file per process")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint every k-th chunk boundary (plus the end)")
+    ap.add_argument("--sync-ckpt", action="store_true",
+                    help="write checkpoints synchronously at the boundary "
+                         "(default: background write overlapped with the "
+                         "next chunk's compute)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate global F only every k-th round (+ final); "
                          "skipped history rows hold NaN")

@@ -93,11 +93,15 @@ def main() -> None:
         mesh = make_host_mesh()
         res = run_distributed(cfg, mesh, krun, cobjs, query, global_value,
                               args.rounds, chunk=args.chunk, checkpoint_dir=ckpt,
-                              eval_every=args.eval_every)
+                              checkpoint_every=args.ckpt_every,
+                              eval_every=args.eval_every,
+                              async_checkpoint=not args.sync_ckpt)
     else:
         res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds,
                            chunk=args.chunk, checkpoint_dir=ckpt,
-                           eval_every=args.eval_every)
+                           checkpoint_every=args.ckpt_every,
+                           eval_every=args.eval_every,
+                           async_checkpoint=not args.sync_ckpt)
     dt = time.time() - t0
 
     f = res.f_values

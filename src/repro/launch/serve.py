@@ -18,22 +18,33 @@ from repro.models.model import decode_step, init_train_state, prefill
 from repro.sharding.rules import ShardingPolicy, mesh_context
 
 
+def sample_token(logits, temperature: float, key) -> jax.Array:
+    """Next token ids from (B, V) logits: greedy argmax at temperature 0,
+    temperature-scaled categorical otherwise.  -> (B, 1) int32."""
+    if temperature > 0:
+        return jax.random.categorical(key, logits / temperature)[:, None].astype(jnp.int32)
+    return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
 def generate(cfg, params, batch, policy, gen_len: int, cache_len: int, temperature: float, key):
-    """Greedy/temperature sampling loop over decode_step."""
+    """Greedy/temperature sampling loop over decode_step.
+
+    The PREFILL logits go through the same sampling rule as every decode
+    step -- the first generated token used to be hard-wired to greedy
+    argmax, so ``--temperature > 0`` runs all started with the same token.
+    """
     logits, cache = jax.jit(lambda p, b: prefill(p, cfg, b, policy, cache_len=cache_len))(
         params, batch
     )
     step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, policy))
     toks = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    key, sub = jax.random.split(key)
+    tok = sample_token(logits, temperature, sub)
     for i in range(gen_len):
         toks.append(tok)
         logits, cache = step(params, cache, tok)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, temperature, sub)
     return jnp.concatenate(toks, axis=1), cache
 
 

@@ -34,12 +34,26 @@ def sgd_init(params: Pytree) -> OptState:
     return OptState(inner=())
 
 
+def _keep_dtype(p: jax.Array, new_p: jax.Array) -> jax.Array:
+    """Updated leaf cast back to the PARAM dtype.
+
+    ``p - lr * (...)`` with an f32 ``lr`` silently promotes bf16 params to
+    f32 on the first step -- the model then runs (and checkpoints) in the
+    wrong precision and the restored-vs-init dtype validation fails.  The
+    update math stays in the promoted precision; only the stored leaf is
+    cast.  A no-op for f32 params (same-dtype astype is identity).
+    """
+    return new_p.astype(p.dtype)
+
+
 def sgd_update(
     state: OptState, grads: Pytree, params: Pytree, lr: float | jax.Array, momentum: float = 0.0
 ) -> tuple[Pytree, OptState]:
     if momentum and state.inner == ():
         raise ValueError("momentum SGD requires sgd_momentum_init")
-    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: _keep_dtype(p, p - lr * g), params, grads
+    )
     return new_params, state
 
 
@@ -66,7 +80,8 @@ def adam_update(
     bc1 = 1 - b1 ** step.astype(jnp.float32)
     bc2 = 1 - b2 ** step.astype(jnp.float32)
     new_params = jax.tree_util.tree_map(
-        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), params, mu, nu
+        lambda p, m, v: _keep_dtype(p, p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)),
+        params, mu, nu,
     )
     return new_params, OptState(inner=AdamState(mu=mu, nu=nu, step=step))
 
@@ -95,7 +110,9 @@ def adamw_update(
     bc1 = 1 - b1 ** step.astype(jnp.float32)
     bc2 = 1 - b2 ** step.astype(jnp.float32)
     new_params = jax.tree_util.tree_map(
-        lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p),
+        lambda p, m, v: _keep_dtype(
+            p, p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p)
+        ),
         params,
         mu,
         nu,

@@ -301,6 +301,103 @@ def test_repair_pass_repairs_only_flagged(quad):
 
 
 # ---------------------------------------------------------------------------
+# Zero-sync boundary: device-side repair decision (DESIGN.md Sec. 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_mesh", [False, True], ids=["vmap", "shard_map"])
+def test_device_repair_matches_host_oracle(quad, use_mesh):
+    """The device-decided boundary (`boundary_repair_on_device`) == the
+    host-read oracle (`repair_flagged_clients`), leaf for leaf, on both
+    engines -- including n_refactors accounting and flag clearing."""
+    mesh = jax.make_mesh((1,), ("data",)) if use_mesh else None
+    cfg = _fzoos_cfg()
+    states = alg.init_states(cfg, jax.random.PRNGKey(1), jnp.full((8,), 0.5))
+    flags = jnp.asarray([True, False, False, True])
+    states = states._replace(factor=states.factor._replace(needs_repair=flags))
+    if mesh is not None:
+        from repro.core.federated import shard_clients
+        states = shard_clients(mesh, states)
+
+    want, n = rounds_mod.repair_flagged_clients(states, cfg, mesh=mesh)
+    assert n == 2
+    got = rounds_mod.boundary_repair_on_device(states, cfg, mesh=mesh)
+    for g, w in zip(jax.tree_util.tree_leaves(got.factor),
+                    jax.tree_util.tree_leaves(want.factor)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert not bool(got.factor.needs_repair.any())
+
+
+def test_device_repair_noop_when_clear(quad):
+    """All-healthy boundary: the gated branch is untaken and the factors come
+    back bitwise unchanged (and non-deferred configs skip the pass whole)."""
+    cfg = _fzoos_cfg()
+    states = alg.init_states(cfg, jax.random.PRNGKey(1), jnp.full((8,), 0.5))
+    # snapshot first: the boundary donates the factor buffers (in-place)
+    want = [np.asarray(a) for a in jax.tree_util.tree_leaves(states.factor)]
+    got = rounds_mod.boundary_repair_on_device(states, cfg)
+    for g, w in zip(jax.tree_util.tree_leaves(got.factor), want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+    inline_cfg = _fzoos_cfg(defer_repair=False)
+    st2 = alg.init_states(inline_cfg, jax.random.PRNGKey(1), jnp.full((8,), 0.5))
+    assert rounds_mod.boundary_repair_on_device(st2, inline_cfg) is st2
+
+
+def test_boundary_executable_gates_eigh_behind_cond(quad):
+    """The fused boundary executable carries the repair eigh BEHIND a
+    conditional (so the all-healthy steady state never executes it), while
+    the scanned chunk body stays eigh-free (asserted separately above)."""
+    import re
+
+    probe = jax.jit(lambda a: jnp.linalg.eigh(a)[0]).lower(jnp.eye(4)).as_text()
+    markers = {m for m in re.findall(r'custom_call_target\s*=\s*"([^"]+)"', probe)}
+    markers |= {"Eigh", "syevd"}
+    markers = {m for m in markers if "syev" in m.lower() or "eigh" in m.lower()}
+
+    cfg = _fzoos_cfg()
+    states = alg.init_states(cfg, jax.random.PRNGKey(1), jnp.full((8,), 0.5))
+    txt = jax.jit(gp.factor_repair_gated).lower(
+        states.factor, jnp.float32(1e-4)).as_text()
+    assert any(m in txt for m in markers)  # the repair branch is there...
+    assert re.search(r"\bcase\b|\bconditional\b", txt)  # ...but gated
+
+
+def test_steady_state_boundary_issues_no_device_get(quad):
+    """THE tentpole acceptance: a steady-state deferred distributed run
+    performs ZERO host syncs at chunk boundaries -- no ``device_get`` of the
+    flag vector (or anything else) between the initial eval and the final
+    history return."""
+    from repro.core import rff as rfflib
+
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = _fzoos_cfg()
+    x0 = jnp.full((8,), 0.5, jnp.float32)
+    rff = rfflib.make_rff(jax.random.PRNGKey(1), cfg.n_features, cfg.dim,
+                          cfg.lengthscale)
+    from repro.core.federated import shard_clients
+    states = shard_clients(mesh, alg.init_states(cfg, jax.random.PRNGKey(2), x0))
+
+    calls = []
+    real_get = jax.device_get
+
+    def spy(x):
+        calls.append(type(x).__name__)
+        return real_get(x)
+
+    jax.device_get = spy
+    try:
+        _, res = rounds_mod.run_rounds(
+            cfg, rff, obj.quadratic_query, quad, states, x0,
+            obj.quadratic_global_value, rounds=6, chunk=2, mesh=mesh,
+        )
+    finally:
+        jax.device_get = real_get
+    assert calls == [], calls
+    assert np.isfinite(np.asarray(res.f_values)).all()
+
+
+# ---------------------------------------------------------------------------
 # Client-batched phase vs the per-client vmapped phase
 # ---------------------------------------------------------------------------
 

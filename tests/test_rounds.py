@@ -144,6 +144,43 @@ def test_resume_rejects_mismatched_rounds(quad, tmp_path):
                      obj.quadratic_global_value, 6, chunk=2, checkpoint_dir=ckpt)
 
 
+def test_resume_rejects_mismatched_eval_every(quad, tmp_path):
+    """Regression: `eval_every` is part of the resume identity.  Resuming
+    with a different value used to splice two NaN patterns into one
+    f_values history; now it fails loudly like rounds/cfg.  `chunk` stays
+    excluded by design (dispatch granularity only), so a resume with a
+    different chunk length succeeds."""
+    cfg = alg.AlgoConfig(name="fedzo", dim=8, n_clients=4, local_steps=1, q=2)
+    k = jax.random.PRNGKey(5)
+    args = (cfg, k, quad, obj.quadratic_query, obj.quadratic_global_value, 6)
+    ckpt = str(tmp_path / "ee_ckpt")
+    alg.simulate(*args, chunk=2, eval_every=2, checkpoint_dir=ckpt)
+    with pytest.raises(ValueError, match="eval_every=2"):
+        alg.simulate(*args, chunk=2, eval_every=3, checkpoint_dir=ckpt)
+    # different chunk is a legitimate resume (validated fields only)
+    res = alg.simulate(*args, chunk=3, eval_every=2, checkpoint_dir=ckpt)
+    assert np.isfinite(np.asarray(res.f_values)[[0, 2, 4, 6]]).all()
+
+
+def test_checkpoint_sync_mode_roundtrip(quad, tmp_path):
+    """`async_checkpoint=False` (the legacy blocking write) produces the
+    same checkpoints and the same resume behavior as the async writer."""
+    cfg = alg.AlgoConfig(name="fedzo", dim=8, n_clients=4, local_steps=1, q=2)
+    k = jax.random.PRNGKey(5)
+    args = (cfg, k, quad, obj.quadratic_query, obj.quadratic_global_value, 4)
+    a_dir, s_dir = str(tmp_path / "a"), str(tmp_path / "s")
+    r_a = alg.simulate(*args, chunk=2, checkpoint_dir=a_dir)
+    r_s = alg.simulate(*args, chunk=2, checkpoint_dir=s_dir,
+                       async_checkpoint=False)
+    assert latest_step(a_dir) == latest_step(s_dir) == 4
+    np.testing.assert_array_equal(np.asarray(r_a.xs), np.asarray(r_s.xs))
+    from repro.checkpoint import io as ckpt_io
+    ta = ckpt_io.load_meta(a_dir, 4)
+    ts = ckpt_io.load_meta(s_dir, 4)
+    assert ta["extra"] == ts["extra"]
+    assert ta["dtypes"] == ts["dtypes"]
+
+
 def test_eval_every_nan_contract(quad):
     """eval_every=k: F evaluated at rounds k, 2k, ... plus ALWAYS the final
     round; skipped rows hold NaN; everything else (xs, queries) unaffected."""

@@ -38,6 +38,24 @@ def test_adamw_decays_unused_weights():
     assert float(p["x"][0]) < 1.0
 
 
+def test_optimizer_updates_preserve_param_dtype():
+    """Regression: ``p - lr * (...)`` with an f32 lr promoted bf16 params to
+    f32 on the first step, so trained LM params drifted precision and
+    checkpoints failed the restored-vs-init dtype validation."""
+    from repro.optim import sgd_init, sgd_update
+
+    p = {"w": jnp.ones((2, 3), jnp.bfloat16), "b": jnp.zeros((3,), jnp.float32)}
+    g = {"w": jnp.full((2, 3), 0.1, jnp.bfloat16), "b": jnp.full((3,), 0.1)}
+    lr = jnp.asarray(0.05, jnp.float32)  # large enough to move a bf16 ULP
+    for init, update in ((adam_init, adam_update), (adamw_init, adamw_update),
+                         (sgd_init, sgd_update)):
+        opt = init(p)
+        new_p, _ = update(opt, g, p, lr)
+        assert new_p["w"].dtype == jnp.bfloat16, update.__name__
+        assert new_p["b"].dtype == jnp.float32, update.__name__
+        assert float(jnp.abs(new_p["w"].astype(jnp.float32) - 1.0).max()) > 0
+
+
 def test_warmup_cosine_schedule_shape():
     s = warmup_cosine_schedule(1.0, 10, 110)
     assert float(s(0)) == 0.0
@@ -76,6 +94,25 @@ def test_label_subset_partition_properties(n, n_clients, p, seed):
     if p == 1.0:
         for idx in parts:
             assert len(idx) == n  # everyone sees everything
+
+
+def test_label_subset_degenerate_pad_no_duplicates():
+    """Regression: the degenerate-draw pad used to sample from ALL points,
+    so it could duplicate an index already in the client's set.  One point
+    per class forces every client through the pad path (1 chosen point +
+    min_per_client-1 padded); the pad must draw from the complement."""
+    labels = np.arange(8)  # 8 classes x 1 point each
+    for seed in range(16):
+        parts = label_subset_partition(labels, n_clients=4, p_shared=0.1,
+                                       seed=seed, min_per_client=8)
+        for idx in parts:
+            assert len(np.unique(idx)) == len(idx) == 8, (seed, idx)
+
+    # the pad never over-asks when the complement is smaller than the deficit
+    parts = label_subset_partition(np.arange(4), n_clients=2, p_shared=0.3,
+                                   seed=0, min_per_client=10)
+    for idx in parts:
+        assert len(np.unique(idx)) == len(idx) == 4
 
 
 @settings(max_examples=15, deadline=None)
