@@ -19,11 +19,18 @@ import glob
 import json
 import os
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import BACKEND_ROOFLINE, ICI_BW
 from repro.models.model import INPUT_SHAPES
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
-HBM_PER_CHIP = 16e9  # v5e
+# Per-backend constants come from the shared table in launch/mesh.py -- the
+# same numbers the kernel block autotuner keys on, so the bench-reported
+# envelopes and the tuned block shapes can never disagree.  Roofline tables
+# model the TPU target regardless of the host backend running the analysis.
+_TPU = BACKEND_ROOFLINE["tpu"]
+PEAK_FLOPS_BF16 = _TPU["peak_flops"]
+HBM_BW = _TPU["hbm_bw"]
+HBM_PER_CHIP = _TPU["hbm_bytes"]
 
 SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 

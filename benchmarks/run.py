@@ -58,12 +58,26 @@ def _metric_direction(key: str) -> str | None:
 
 
 def _walk_metrics(payload, prefix=""):
-    """Yield (dotted_key, value) for every numeric leaf of a payload."""
+    """Yield (dotted_key, value) for every numeric leaf of a payload.
+
+    The ``backend`` identity subtree holds only strings, so it never
+    contributes metrics."""
     if isinstance(payload, dict):
         for k, v in payload.items():
             yield from _walk_metrics(v, f"{prefix}{k}.")
     elif isinstance(payload, (int, float)) and not isinstance(payload, bool):
         yield prefix.rstrip("."), float(payload)
+
+
+def backend_identity() -> dict:
+    """Stamp recorded into every BENCH_*.json: numbers from a CPU run and a
+    TPU run are not comparable, so --compare refuses cross-backend diffs."""
+    import jax
+
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+    }
 
 
 def compare_payload(name: str, fresh: dict, committed_path: str, tol: float) -> list[str]:
@@ -72,6 +86,14 @@ def compare_payload(name: str, fresh: dict, committed_path: str, tol: float) -> 
         return [f"{name}: no committed baseline at {committed_path}"]
     with open(committed_path) as f:
         committed = json.load(f)
+    base_backend = (committed.get("backend") or {}).get("platform")
+    fresh_backend = (fresh.get("backend") or {}).get("platform")
+    if base_backend and fresh_backend and base_backend != fresh_backend:
+        return [
+            f"{name}: REFUSING cross-backend comparison -- committed baseline "
+            f"is {base_backend} ({(committed['backend']).get('device_kind')}), "
+            f"this run is {fresh_backend}; re-baseline on the matching backend"
+        ]
     base = dict(_walk_metrics(committed))
     regressions = []
     for key, val in _walk_metrics(fresh):
@@ -114,6 +136,7 @@ def main() -> None:
                 print(row.csv(), flush=True)
             payload = getattr(mod, "json_payload", lambda: None)()
             if payload:
+                payload["backend"] = backend_identity()
                 path = os.path.join(os.path.dirname(__file__), f"BENCH_{name}.json")
                 if args.compare:
                     regs = compare_payload(name, payload, path, args.compare_tol)

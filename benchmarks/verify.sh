@@ -21,6 +21,10 @@ BENCH_ONLY="${BENCH_ONLY:-rounds,kernels}"
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
+echo "== detected backend =="
+python -c "from benchmarks.run import backend_identity; b = backend_identity(); \
+print(f\"backend={b['platform']} device_kind={b['device_kind']}\")"
+
 echo "== benchmark regression gate (--only ${BENCH_ONLY}, tol ${BENCH_TOL}) =="
 python -m benchmarks.run --only "${BENCH_ONLY}" --compare --compare-tol "${BENCH_TOL}"
 

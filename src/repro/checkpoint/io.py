@@ -239,11 +239,25 @@ def _local_block(arr: jax.Array) -> tuple[np.ndarray, int, int]:
 def _sync(tag: str) -> None:
     """Cross-process barrier; a no-op in single-process runs (the test and
     CPU path).  Multi-process runs order shard writes vs the process-0
-    manifest rename through it."""
-    if jax.process_count() > 1:  # pragma: no cover - multi-process pods only
-        from jax.experimental import multihost_utils
+    manifest rename through it.
 
-        multihost_utils.sync_global_devices(f"repro-ckpt-{tag}")
+    MUST run on the main thread: ``sync_global_devices`` is a collective,
+    and on a multi-process mesh every collective must be issued in the same
+    order on every process.  A barrier issued from the async checkpoint
+    writer thread races the main thread's round collectives and deadlocks
+    the pod, so we refuse loudly instead (``run_rounds`` forces the
+    blocking write path on pods for exactly this reason)."""
+    if jax.process_count() > 1:
+        if threading.current_thread() is not threading.main_thread():
+            raise RuntimeError(
+                "checkpoint _sync barrier issued off the main thread on a "
+                f"multi-process mesh (tag={tag!r}); collectives from the "
+                "async writer thread deadlock against the round loop. "
+                "Use async_checkpoint=False for distributed per-shard writes."
+            )
+        from jax.experimental import multihost_utils  # pragma: no cover
+
+        multihost_utils.sync_global_devices(f"repro-ckpt-{tag}")  # pragma: no cover
 
 
 def prepare_round_state(states, history, mesh=None) -> dict:

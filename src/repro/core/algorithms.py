@@ -86,6 +86,16 @@ class AlgoConfig:
     # default: the RFF-Gram solve is the paper's eq. 6 and changing it
     # perturbs w by the O(1/sqrt(M)) feature-approximation error.
     rff_fit_exact: bool = False
+    # Kernel tiling overrides for the client-batched scoring / grad-mean
+    # Pallas kernels (kernels/ops.py).  None defers to the deterministic
+    # per-(backend, shape) autotuner (kernels/autotune.py); pinning them
+    # here makes a run's tiling reproducible independent of the autotuner's
+    # model (the choice only affects scheduling, never results -- padded
+    # trajectory slots contribute exactly zero on the tiled path).
+    score_block_n: Optional[int] = None
+    score_block_cap: Optional[int] = None
+    grad_block_n: Optional[int] = None
+    grad_block_cap: Optional[int] = None
     # domain
     lo: float = 0.0
     hi: float = 1.0
@@ -343,6 +353,7 @@ def _local_phase_clients(
             cands = gp.select_active_queries_cached_clients(
                 k_act, traj, factor, hyper, sts.x, cfg.active_candidates,
                 cfg.active_per_iter, cfg.active_radius, cfg.lo, cfg.hi,
+                block_n=cfg.score_block_n, block_cap=cfg.score_block_cap,
             )  # (N, n_act, d)
             kq = jax.vmap(
                 lambda k: jax.random.split(jax.random.fold_in(k, 1), cfg.active_per_iter)
@@ -355,7 +366,10 @@ def _local_phase_clients(
         sts = sts._replace(traj=traj, factor=factor, queries=sts.queries + n_q)
 
         # eq. (2): batched surrogate mean + per-client RFF correction
-        g_loc = gp.grad_mean_cached_clients(traj, factor, hyper, sts.x)  # (N, d)
+        g_loc = gp.grad_mean_cached_clients(
+            traj, factor, hyper, sts.x,
+            block_n=cfg.grad_block_n, block_cap=cfg.grad_block_cap,
+        )  # (N, d)
         corr = rfflib.grad_features_t_w_rows(rff, sts.x, sts.w_global) - \
             rfflib.grad_features_t_w_rows(rff, sts.x, sts.w_local)
         if cfg.gamma_mode == "inv_t":
@@ -406,6 +420,7 @@ def _post_phase_clients(
         cands = gp.select_active_queries_cached_clients(
             k_act, traj, factor, hyper, states.x, cfg.active_candidates,
             cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
+            block_n=cfg.score_block_n, block_cap=cfg.score_block_cap,
         )
         kq = jax.vmap(
             lambda k: jax.random.split(jax.random.fold_in(k, 2), cfg.active_round_end)

@@ -759,32 +759,48 @@ def gp_alpha_cached_clients(trajs: Trajectory, factors: GramFactor) -> jax.Array
 
 
 def grad_mean_cached_clients(
-    trajs: Trajectory, factors: GramFactor, hyper: GPHyper, xs: jax.Array
+    trajs: Trajectory,
+    factors: GramFactor,
+    hyper: GPHyper,
+    xs: jax.Array,
+    *,
+    block_n: int | None = None,
+    block_cap: int | None = None,
 ) -> jax.Array:
     """Posterior gradient mean at one point per client: (N, d) -> (N, d).
 
     One client-batched fused kernel launch (``ops.grad_mean_clients``)
-    instead of N vmapped launches.
+    instead of N vmapped launches.  Unset block sizes defer to the
+    autotuner, which resolves the single-query candidate axis to the f32
+    sublane tile (block_n=8: a 128-row block would be ~99% padding work);
+    ``AlgoConfig.grad_block_*`` pins them instead.
     """
     from repro.kernels import ops  # deferred: keep core importable without kernels
 
     alpha = gp_alpha_cached_clients(trajs, factors)
-    # block_n=8 (the f32 sublane tile): the candidate axis is a single query
-    # point here, so the default 128-row block would be ~99% padding work.
     out = ops.grad_mean_clients(
-        xs[:, None, :], trajs.xs, alpha, lengthscale=hyper.lengthscale, block_n=8
+        xs[:, None, :], trajs.xs, alpha, lengthscale=hyper.lengthscale,
+        block_n=block_n, block_cap=block_cap,
     )
     return out[:, 0, :]
 
 
 def grad_uncertainty_batch_cached_clients(
-    trajs: Trajectory, factors: GramFactor, hyper: GPHyper, xs_q: jax.Array
+    trajs: Trajectory,
+    factors: GramFactor,
+    hyper: GPHyper,
+    xs_q: jax.Array,
+    *,
+    block_n: int | None = None,
+    block_cap: int | None = None,
 ) -> jax.Array:
     """Uncertainty scores for a per-client candidate batch: (N, nc, d) -> (N, nc).
 
     Client-batched analogue of ``grad_uncertainty_batch_cached`` (same
     centroid-shifted contraction, see that docstring for the numerics); the
     whole client batch is ONE fused pass in ``ops.uncertainty_scores_clients``.
+    Unset block sizes defer to the autotuner; ``AlgoConfig.score_block_*``
+    pins them.
     """
     from repro.kernels import ops  # deferred: keep core importable without kernels
 
@@ -796,7 +812,9 @@ def grad_uncertainty_batch_cached_clients(
     d = trajs.xs.shape[-1]
     prior = d / (hyper.lengthscale**2)
     return ops.uncertainty_scores_clients(
-        xs_q - c0[:, None, :], xs_sh, binv, pmat, lengthscale=hyper.lengthscale, prior=prior
+        xs_q - c0[:, None, :], xs_sh, binv, pmat,
+        lengthscale=hyper.lengthscale, prior=prior,
+        block_n=block_n, block_cap=block_cap,
     )
 
 
@@ -811,6 +829,9 @@ def select_active_queries_cached_clients(
     radius: float,
     lo: float = 0.0,
     hi: float = 1.0,
+    *,
+    block_n: int | None = None,
+    block_cap: int | None = None,
 ) -> jax.Array:
     """``select_active_queries_cached`` for the whole client batch: (N, n_select, d)."""
     d = centers.shape[-1]
@@ -818,6 +839,8 @@ def select_active_queries_cached_clients(
         lambda k: jax.random.uniform(k, (n_candidates, d), minval=-radius, maxval=radius)
     )(keys)
     cands = jnp.clip(centers[:, None, :] + delta, lo, hi)
-    scores = grad_uncertainty_batch_cached_clients(trajs, factors, hyper, cands)
+    scores = grad_uncertainty_batch_cached_clients(
+        trajs, factors, hyper, cands, block_n=block_n, block_cap=block_cap
+    )
     _, top = jax.lax.top_k(scores, n_select)  # batched over the client axis
     return jnp.take_along_axis(cands, top[:, :, None], axis=1)

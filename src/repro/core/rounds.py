@@ -455,8 +455,18 @@ def run_rounds(
     # Multi-process pods force the blocking write: the sharded layout's
     # cross-process barrier (io._sync) is a collective, and issuing it from
     # the writer thread while the main thread dispatches the next chunk's
-    # psum could interleave collectives in inconsistent cross-process order
-    # (ROADMAP open item: validate the composition, then lift this).
+    # psum could interleave collectives in inconsistent cross-process order.
+    # io._sync enforces the same invariant defensively (RuntimeError off the
+    # main thread on a multi-process mesh).
+    if checkpoint_dir and async_checkpoint and jax.process_count() > 1:
+        if jax.process_index() == 0:
+            print(
+                "[repro.rounds] async_checkpoint requested on a "
+                f"{jax.process_count()}-process mesh: FORCING blocking "
+                "per-shard writes (async writer would issue the _sync "
+                "collective off the main thread and deadlock the pod)."
+            )
+        async_checkpoint = False
     writer = (
         ckpt_io.AsyncCheckpointWriter()
         if (checkpoint_dir and async_checkpoint and jax.process_count() == 1)

@@ -1,0 +1,182 @@
+"""Block-size autotuner for the tiled GP kernels (DESIGN.md Sec. 4).
+
+``select_blocks(kind, ...)`` picks ``(block_n, block_cap)`` for the
+cap-tiled scoring / grad-mean kernels from a VMEM-footprint +
+arithmetic-intensity model keyed on the per-backend roofline constants in
+``repro.launch.mesh.BACKEND_ROOFLINE`` (the same table
+``benchmarks/roofline.py`` reports against).  The choice is a pure function
+of ``(backend, kind, n_clients, n, cap, d)`` -- deterministic and therefore
+reproducible -- and is memoized in a process-level cache under exactly that
+key.  Callers that need a specific tiling (tests, `AlgoConfig` overrides)
+bypass the tuner by passing explicit block sizes to the ops wrappers.
+
+The model is intentionally small:
+
+* **feasibility** -- the per-grid-cell VMEM working set (input tiles,
+  intermediate (bn, bc) tiles, accumulators, x2 for double buffering) must
+  fit the backend's ``vmem_bytes`` budget;
+* **cost** -- per-cell ``max(flops/peak, hbm_bytes/bw)`` summed over the
+  padded grid, so oversized blocks pay their padding waste and undersized
+  ones pay the re-streamed (bc, bc) Gram tiles and recomputed h tiles.
+
+For backends missing from the table the ``_default`` entry keeps the choice
+deterministic; ``measure_blocks`` is the measured-sweep fallback that times
+real kernel calls over the feasible candidate grid and caches the argmin
+under the same key (an explicit API: it blocks on device results, so it
+cannot run under a jit trace the way ``select_blocks`` can).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+
+from repro.launch.mesh import BACKEND_ROOFLINE
+
+#: f32 tile alignment of the TPU vector unit: (sublane, lane).
+_SUBLANE = 8
+_LANE = 128
+
+#: Candidate grids.  block_cap candidates are lane-aligned (the cap axis is
+#: the minor axis of the (bn, bc) h tiles and both axes of the Gram tiles);
+#: block_n candidates are sublane-aligned.
+_BLOCK_N_CANDIDATES = (8, 16, 32, 64, 128, 256)
+_BLOCK_CAP_CANDIDATES = (128, 256, 512, 1024)
+
+_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cache_key(kind: str, backend: str, n_clients: int, n: int, cap: int, d: int):
+    return (backend, kind, n_clients, n, cap, d)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _vmem_cell_bytes(kind: str, bn: int, bc: int, d: int) -> int:
+    """Per-grid-cell VMEM working set, f32, x2 for double buffering.
+
+    score: c tile + two x tiles + two (bc, bc) Gram tiles + the h / cross /
+    g1 / g2 (bn, bc) intermediates + the (bn, 1) accumulator.
+    grad:  c tile + x tile + alpha row + the (bn, bc) w tile + the (bn, d)
+    accumulator + the (bn, 1) running sum.
+    """
+    dl = _round_up(d, _LANE)  # minor axes are lane-padded by the compiler
+    if kind == "score":
+        words = bn * dl + 2 * bc * dl + 2 * bc * bc + 5 * bn * bc + 2 * bn
+    elif kind == "grad":
+        words = bn * dl + bc * dl + bc + 3 * bn * bc + bn * dl + 2 * bn
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    return 2 * 4 * words
+
+
+def _cell_cost(kind: str, bn: int, bc: int, d: int, hw: dict) -> float:
+    """max(compute, memory) seconds for ONE grid cell."""
+    if kind == "score":
+        flops = 2 * 2 * bn * bc * d + 2 * 2 * bn * bc * bc + 8 * bn * bc
+        bytes_ = 4 * (bn * d + 2 * bc * d + 2 * bc * bc + bn)
+    else:
+        flops = 2 * 2 * bn * bc * d + 6 * bn * bc
+        bytes_ = 4 * (bn * d + bc * d + bc + bn * d)
+    return max(flops / hw["peak_flops"], bytes_ / hw["hbm_bw"])
+
+
+def _grid_cells(kind: str, bn: int, bc: int, n: int, cap: int, n_clients: int) -> int:
+    caps = _round_up(cap, bc) // bc
+    rows = _round_up(n, bn) // bn
+    per_client = rows * caps * caps if kind == "score" else rows * caps
+    return n_clients * per_client
+
+
+def _feasible(kind: str, n: int, cap: int, d: int, hw: dict):
+    budget = 0.75 * hw["vmem_bytes"]
+    for bn in _BLOCK_N_CANDIDATES:
+        if bn > _round_up(max(n, 1), _SUBLANE):
+            continue  # pure padding beyond the candidate count
+        for bc in _BLOCK_CAP_CANDIDATES:
+            if bc > _round_up(max(cap, 1), _LANE):
+                continue
+            if _vmem_cell_bytes(kind, bn, bc, d) <= budget:
+                yield bn, bc
+
+
+def select_blocks(
+    kind: str,
+    *,
+    n: int,
+    cap: int,
+    d: int,
+    n_clients: int = 1,
+    backend: Optional[str] = None,
+) -> tuple[int, int]:
+    """Deterministic ``(block_n, block_cap)`` for a kernel ``kind``/shape.
+
+    ``kind`` is ``"score"`` (uncertainty scoring) or ``"grad"`` (grad mean);
+    ``n`` is the per-client candidate count, ``cap`` the trajectory ring
+    capacity, ``d`` the search dimension, ``n_clients`` the client batch.
+    """
+    backend = backend or jax.default_backend()
+    key = cache_key(kind, backend, n_clients, n, cap, d)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    hw = BACKEND_ROOFLINE.get(backend, BACKEND_ROOFLINE["_default"])
+    best: Optional[tuple[float, tuple[int, int]]] = None
+    for bn, bc in _feasible(kind, n, cap, d, hw):
+        cost = _cell_cost(kind, bn, bc, d, hw) * _grid_cells(kind, bn, bc, n, cap, n_clients)
+        # Deterministic tie-break: prefer LARGER tiles at equal modeled cost
+        # (fewer grid cells, less accumulator traffic the model can't see).
+        cand = (cost, (bn, bc))
+        if best is None or cost < best[0] or (cost == best[0] and cand[1] > best[1]):
+            best = cand
+    if best is None:  # nothing fits (tiny VMEM budget): minimum legal tile
+        best = (0.0, (_SUBLANE, _LANE))
+    _CACHE[key] = best[1]
+    return best[1]
+
+
+def measure_blocks(
+    kind: str,
+    run_fn: Callable[[int, int], jax.Array],
+    *,
+    n: int,
+    cap: int,
+    d: int,
+    n_clients: int = 1,
+    backend: Optional[str] = None,
+    candidates: Optional[Iterable[tuple[int, int]]] = None,
+    reps: int = 3,
+) -> tuple[int, int]:
+    """Measured-sweep fallback: time ``run_fn(block_n, block_cap)`` over the
+    feasible candidate grid, cache the winner under the model's key, and
+    return it.  Subsequent ``select_blocks`` calls for the same key return
+    the measured choice.  Explicit API only -- it calls
+    ``block_until_ready`` and so cannot run under a jit trace.
+    """
+    backend = backend or jax.default_backend()
+    hw = BACKEND_ROOFLINE.get(backend, BACKEND_ROOFLINE["_default"])
+    cands = list(candidates) if candidates is not None else list(
+        _feasible(kind, n, cap, d, hw)
+    )
+    if not cands:
+        cands = [(_SUBLANE, _LANE)]
+    best: Optional[tuple[float, tuple[int, int]]] = None
+    for bn, bc in cands:
+        run_fn(bn, bc).block_until_ready()  # compile outside the timing
+        dt = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_fn(bn, bc).block_until_ready()
+            dt = min(dt, time.perf_counter() - t0)
+        if best is None or dt < best[0]:
+            best = (dt, (bn, bc))
+    _CACHE[cache_key(kind, backend, n_clients, n, cap, d)] = best[1]
+    return best[1]

@@ -12,11 +12,22 @@ kernel-vector generation with both contractions, so neither the (bn, cap)
 h-tile nor the explicit (cap, d) dkdx Jacobian ever materializes in HBM --
 the seed path built J per query point.
 
-Grid: (n / block_n,); xs and alpha stay resident across programs.
+Two kernel families share the tile numerics:
 
-``grad_mean_clients_kernel`` adds a CLIENT grid dimension for the vmapped
+* **resident** (``grad_mean_kernel``): grid (n / block_n,); xs and alpha
+  stay fully VMEM-resident across programs.
+* **cap-tiled** (``grad_mean_tiled_kernel``): grid
+  (n/block_n, cap/block_cap) -- the trailing grid dimension streams
+  (block_cap, d) trajectory tiles while a (block_n, d) f32 VMEM scratch
+  holds the running ``(h o alpha) @ X`` accumulator and a (block_n, 1)
+  scratch the running ``h . alpha``, so VMEM residency is independent of
+  cap.  Padded trajectory slots carry alpha == 0 and contribute exactly
+  zero (w = h o alpha vanishes there).  The finalize step applies
+  ``(acc - s o c) / l^2`` at the last cap tile.
+
+``*_clients_kernel`` variants add a CLIENT grid dimension for the batched
 federated engine: one launch computes the gradient mean for the whole
-client batch (grid (N, n/block_n)) instead of N vmapped launches.
+client batch instead of N vmapped launches.
 """
 
 from __future__ import annotations
@@ -26,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _grad_block(c, x, alpha, *, inv_two_l2: float, inv_l2: float):
@@ -115,5 +127,152 @@ def grad_mean_clients_kernel(
             pl.BlockSpec((1, 1, cap), lambda b, i: (b, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(cands, xs, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Cap-tiled kernels: the (cap, d) trajectory / (cap,) alpha stream through
+# VMEM one (block_cap, d) tile at a time with a running (bn, d) accumulator.
+# ---------------------------------------------------------------------------
+
+
+def _grad_cell(c, x, alpha, acc_ref, s_ref, *, inv_two_l2: float):
+    """Accumulate one cap tile:  acc += (h o alpha) @ x,  s += (h . alpha).
+
+    c (bn, d), x (bc, d), alpha (1, bc).  Padded trajectory slots arrive
+    with alpha == 0, so w vanishes there exactly.  Accumulation is f32.
+    """
+    n1 = jnp.sum(c * c, axis=-1, keepdims=True)  # (bn, 1)
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True).T  # (1, bc)
+    cross = jax.lax.dot_general(
+        c, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
+    w = jnp.exp(-d2 * inv_two_l2) * alpha  # (bn, bc)
+    acc_ref[...] += jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+    s_ref[...] += jnp.sum(w, axis=-1, keepdims=True).astype(jnp.float32)
+
+
+def _kernel_tiled(c_ref, x_ref, a_ref, o_ref, acc_ref, s_ref, *,
+                  inv_two_l2: float, inv_l2: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    _grad_cell(c_ref[...], x_ref[...], a_ref[...], acc_ref, s_ref,
+               inv_two_l2=inv_two_l2)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[...] = (
+            (acc_ref[...] - s_ref[...] * c_ref[...]) * inv_l2
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lengthscale", "block_n", "block_cap", "interpret")
+)
+def grad_mean_tiled_kernel(
+    cands: jax.Array,
+    xs: jax.Array,
+    alpha: jax.Array,  # (1, cap)
+    *,
+    lengthscale: float,
+    block_n: int = 128,
+    block_cap: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Cap-tiled gradient mean: grid (n/block_n, cap/block_cap)."""
+    n, d = cands.shape
+    cap = xs.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    assert cap % block_cap == 0, (cap, block_cap)
+    assert alpha.shape == (1, cap), alpha.shape
+    grid = (n // block_n, cap // block_cap)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_tiled, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), cands.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_cap, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_cap), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, d), jnp.float32),
+            pltpu.VMEM((block_n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cands, xs, alpha)
+
+
+def _kernel_tiled_clients(c_ref, x_ref, a_ref, o_ref, acc_ref, s_ref, *,
+                          inv_two_l2: float, inv_l2: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    _grad_cell(c_ref[0], x_ref[0], a_ref[0], acc_ref, s_ref,
+               inv_two_l2=inv_two_l2)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (
+            (acc_ref[...] - s_ref[...] * c_ref[0]) * inv_l2
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lengthscale", "block_n", "block_cap", "interpret")
+)
+def grad_mean_tiled_clients_kernel(
+    cands: jax.Array,  # (N, n, d)
+    xs: jax.Array,  # (N, cap, d)
+    alpha: jax.Array,  # (N, 1, cap)
+    *,
+    lengthscale: float,
+    block_n: int = 128,
+    block_cap: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Client-batched cap-tiled gradient mean:
+    grid (N, n/block_n, cap/block_cap) -> (N, n, d)."""
+    nb, n, d = cands.shape
+    cap = xs.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    assert cap % block_cap == 0, (cap, block_cap)
+    assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
+    assert alpha.shape == (nb, 1, cap), alpha.shape
+    grid = (nb, n // block_n, cap // block_cap)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_tiled_clients,
+            inv_two_l2=0.5 / (lengthscale**2),
+            inv_l2=1.0 / (lengthscale**2),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, n, d), cands.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_cap, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, block_cap), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, d), jnp.float32),
+            pltpu.VMEM((block_n, 1), jnp.float32),
+        ],
         interpret=interpret,
     )(cands, xs, alpha)

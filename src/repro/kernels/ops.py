@@ -1,9 +1,17 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Handles block-size padding (zero-pad, slice back) and backend selection:
-on TPU the Pallas kernels run compiled; elsewhere they run in interpret
-mode when ``force_pallas`` (used by tests) or fall back to the jnp oracles
-in ref.py, which are numerically identical.
+Handles block-size padding (zero-pad, slice back), block-size selection and
+backend selection: on TPU the Pallas kernels run compiled; elsewhere they
+run in interpret mode when ``force_pallas`` (used by tests) or fall back to
+the jnp oracles in ref.py, which are numerically identical.
+
+The GP kernels (scoring / grad mean) take ``block_n`` / ``block_cap``; when
+left ``None`` the tuner in ``kernels/autotune.py`` picks them
+deterministically per (backend, shape).  ``block_cap >= cap`` routes to the
+VMEM-resident kernels; smaller ``block_cap`` routes to the cap-tiled
+kernels, with the trajectory axis zero-padded to a tile multiple -- padded
+slots contribute EXACTLY zero (zero B/P rows+columns for scoring, zero
+alpha for the grad mean), so tiling never perturbs results.
 """
 
 from __future__ import annotations
@@ -13,11 +21,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.gp_grad import grad_mean_clients_kernel, grad_mean_kernel
+from repro.kernels import autotune, ref
+from repro.kernels.gp_grad import (
+    grad_mean_clients_kernel,
+    grad_mean_kernel,
+    grad_mean_tiled_clients_kernel,
+    grad_mean_tiled_kernel,
+)
 from repro.kernels.gp_score import (
     uncertainty_scores_clients_kernel,
     uncertainty_scores_kernel,
+    uncertainty_scores_tiled_clients_kernel,
+    uncertainty_scores_tiled_kernel,
 )
 from repro.kernels.rff_features import rff_features_kernel
 from repro.kernels.rff_grad import rff_grad_kernel
@@ -59,6 +74,32 @@ def _pad_axis1(a: jax.Array, target: int) -> jax.Array:
     if pad == 0:
         return a
     return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+
+def _pad_axis(a: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad one axis to ``target`` (cap-axis padding for tiled kernels)."""
+    pad = target - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _pad_gram(a: jax.Array, target: int) -> jax.Array:
+    """Zero-pad BOTH trailing axes of a (..., cap, cap) Gram-shaped array.
+    Zero rows AND columns make padded trajectory slots contribute exactly
+    zero in the tiled bilinear form (see kernels/gp_score.py)."""
+    return _pad_axis(_pad_axis(a, a.ndim - 1, target), a.ndim - 2, target)
+
+
+def _resolve_blocks(kind, n, cap, d, n_clients, block_n, block_cap):
+    """Fill in unset block sizes from the deterministic autotuner."""
+    if block_n is None or block_cap is None:
+        bn, bc = autotune.select_blocks(kind, n=n, cap=cap, d=d, n_clients=n_clients)
+        block_n = bn if block_n is None else block_n
+        block_cap = bc if block_cap is None else block_cap
+    return block_n, block_cap
 
 
 def rff_features(
@@ -139,26 +180,43 @@ def uncertainty_scores(
     *,
     lengthscale,
     prior,
-    block_n: int = 128,
+    block_n: int | None = None,
+    block_cap: int | None = None,
     force_pallas: bool = False,
 ) -> jax.Array:
     """Fused active-query uncertainty scores: (n,d) candidates -> (n,).
 
     ``binv`` is the masked Gram inverse and ``pmat = binv o XX^T``; see
     ref.uncertainty_scores for the algebra.  Padded candidate rows (zeros)
-    produce junk scores that are sliced away before returning; the resident
-    trajectory/Gram inputs are never padded (cap is the compile-time ring
-    capacity).  Traced lengthscale/prior fall back to the jnp oracle.
+    produce junk scores that are sliced away before returning.  With
+    ``block_cap < cap`` the cap-tiled kernel runs and the trajectory axis is
+    zero-padded to a tile multiple (padded slots contribute exactly zero:
+    the B/P padding rows+columns are zero); otherwise the whole (cap, cap)
+    factor pair stays VMEM-resident.  Unset block sizes come from the
+    deterministic autotuner.  Traced lengthscale/prior fall back to the jnp
+    oracle.
     """
     ls, pr = _static_float(lengthscale), _static_float(prior)
     if not (_on_tpu() or force_pallas) or ls is None or pr is None:
         return ref.uncertainty_scores(cands, xs, binv, pmat, lengthscale, prior)
-    n = cands.shape[0]
+    n, d = cands.shape
+    cap = xs.shape[0]
+    block_n, block_cap = _resolve_blocks("score", n, cap, d, 1, block_n, block_cap)
     npad = _round_up(n, block_n)
-    out = uncertainty_scores_kernel(
-        _pad_rows(cands, npad), xs, binv, pmat,
-        lengthscale=ls, prior=pr, block_n=block_n, interpret=not _on_tpu(),
-    )
+    interpret = not _on_tpu()
+    if block_cap >= cap:
+        out = uncertainty_scores_kernel(
+            _pad_rows(cands, npad), xs, binv, pmat,
+            lengthscale=ls, prior=pr, block_n=block_n, interpret=interpret,
+        )
+    else:
+        cpad = _round_up(cap, block_cap)
+        out = uncertainty_scores_tiled_kernel(
+            _pad_rows(cands, npad), _pad_rows(xs, cpad),
+            _pad_gram(binv, cpad), _pad_gram(pmat, cpad),
+            lengthscale=ls, prior=pr, block_n=block_n, block_cap=block_cap,
+            interpret=interpret,
+        )
     return out[:n]
 
 
@@ -170,24 +228,42 @@ def uncertainty_scores_clients(
     *,
     lengthscale,
     prior,
-    block_n: int = 128,
+    block_n: int | None = None,
+    block_cap: int | None = None,
     force_pallas: bool = False,
 ) -> jax.Array:
     """Client-batched fused uncertainty scores: (N, n, d) -> (N, n).
 
     One kernel launch with a client grid dimension for the whole batch;
-    same padding/backend/traced-scalar contract as ``uncertainty_scores``
-    (the candidate axis is padded per client, the client axis never is).
+    same padding/backend/traced-scalar/tiling contract as
+    ``uncertainty_scores`` (the candidate and trajectory axes are padded per
+    client, the client axis never is).  The CPU execution path is the
+    fused-epilogue contraction (``ref.uncertainty_scores_clients_fused``);
+    the textbook oracle stays in ``ref.uncertainty_scores_clients``.
     """
     ls, pr = _static_float(lengthscale), _static_float(prior)
     if not (_on_tpu() or force_pallas) or ls is None or pr is None:
-        return ref.uncertainty_scores_clients(cands, xs, binv, pmat, lengthscale, prior)
-    n = cands.shape[1]
+        return ref.uncertainty_scores_clients_fused(
+            cands, xs, binv, pmat, lengthscale, prior
+        )
+    nb, n, d = cands.shape
+    cap = xs.shape[1]
+    block_n, block_cap = _resolve_blocks("score", n, cap, d, nb, block_n, block_cap)
     npad = _round_up(n, block_n)
-    out = uncertainty_scores_clients_kernel(
-        _pad_axis1(cands, npad), xs, binv, pmat,
-        lengthscale=ls, prior=pr, block_n=block_n, interpret=not _on_tpu(),
-    )
+    interpret = not _on_tpu()
+    if block_cap >= cap:
+        out = uncertainty_scores_clients_kernel(
+            _pad_axis1(cands, npad), xs, binv, pmat,
+            lengthscale=ls, prior=pr, block_n=block_n, interpret=interpret,
+        )
+    else:
+        cpad = _round_up(cap, block_cap)
+        out = uncertainty_scores_tiled_clients_kernel(
+            _pad_axis1(cands, npad), _pad_axis(xs, 1, cpad),
+            _pad_gram(binv, cpad), _pad_gram(pmat, cpad),
+            lengthscale=ls, prior=pr, block_n=block_n, block_cap=block_cap,
+            interpret=interpret,
+        )
     return out[:, :n]
 
 
@@ -197,22 +273,37 @@ def grad_mean_clients(
     alpha: jax.Array,
     *,
     lengthscale,
-    block_n: int = 128,
+    block_n: int | None = None,
+    block_cap: int | None = None,
     force_pallas: bool = False,
 ) -> jax.Array:
     """Client-batched fused gradient mean: (N, n, d) -> (N, n, d).
 
     ``alpha`` (N, cap) must already carry each client's validity mask.
+    With ``block_cap < cap`` the cap-tiled accumulator kernel runs; padded
+    trajectory slots carry alpha == 0 and contribute exactly zero.
     """
     ls = _static_float(lengthscale)
     if not (_on_tpu() or force_pallas) or ls is None:
         return ref.grad_mean_clients(cands, xs, alpha, lengthscale)
-    n = cands.shape[1]
+    nb, n, d = cands.shape
+    cap = xs.shape[1]
+    block_n, block_cap = _resolve_blocks("grad", n, cap, d, nb, block_n, block_cap)
     npad = _round_up(n, block_n)
-    out = grad_mean_clients_kernel(
-        _pad_axis1(cands, npad), xs, alpha[:, None, :],
-        lengthscale=ls, block_n=block_n, interpret=not _on_tpu(),
-    )
+    interpret = not _on_tpu()
+    if block_cap >= cap:
+        out = grad_mean_clients_kernel(
+            _pad_axis1(cands, npad), xs, alpha[:, None, :],
+            lengthscale=ls, block_n=block_n, interpret=interpret,
+        )
+    else:
+        cpad = _round_up(cap, block_cap)
+        out = grad_mean_tiled_clients_kernel(
+            _pad_axis1(cands, npad), _pad_axis(xs, 1, cpad),
+            _pad_axis(alpha, 1, cpad)[:, None, :],
+            lengthscale=ls, block_n=block_n, block_cap=block_cap,
+            interpret=interpret,
+        )
     return out[:, :n, :]
 
 
@@ -222,23 +313,37 @@ def grad_mean_batch(
     alpha: jax.Array,
     *,
     lengthscale,
-    block_n: int = 128,
+    block_n: int | None = None,
+    block_cap: int | None = None,
     force_pallas: bool = False,
 ) -> jax.Array:
     """Fused batched derived-GP gradient mean: (n,d) queries -> (n,d).
 
     ``alpha`` (cap,) must already carry the validity mask (masked solves
     leave invalid slots exactly zero, so padded trajectory slots contribute
-    nothing).  Padded candidate rows are sliced away before returning.
+    nothing -- the same invariant makes cap-axis zero-padding exact on the
+    tiled path).  Padded candidate rows are sliced away before returning.
     Traced lengthscale falls back to the jnp oracle.
     """
     ls = _static_float(lengthscale)
     if not (_on_tpu() or force_pallas) or ls is None:
         return ref.grad_mean_batch(cands, xs, alpha, lengthscale)
-    n = cands.shape[0]
+    n, d = cands.shape
+    cap = xs.shape[0]
+    block_n, block_cap = _resolve_blocks("grad", n, cap, d, 1, block_n, block_cap)
     npad = _round_up(n, block_n)
-    out = grad_mean_kernel(
-        _pad_rows(cands, npad), xs, alpha[None, :],
-        lengthscale=ls, block_n=block_n, interpret=not _on_tpu(),
-    )
+    interpret = not _on_tpu()
+    if block_cap >= cap:
+        out = grad_mean_kernel(
+            _pad_rows(cands, npad), xs, alpha[None, :],
+            lengthscale=ls, block_n=block_n, interpret=interpret,
+        )
+    else:
+        cpad = _round_up(cap, block_cap)
+        out = grad_mean_tiled_kernel(
+            _pad_rows(cands, npad), _pad_rows(xs, cpad),
+            _pad_axis(alpha, 0, cpad)[None, :],
+            lengthscale=ls, block_n=block_n, block_cap=block_cap,
+            interpret=interpret,
+        )
     return out[:n, :]

@@ -103,6 +103,41 @@ def uncertainty_scores_clients(
     return jnp.maximum(prior - corr, 0.0).astype(cands.dtype)
 
 
+def uncertainty_scores_clients_fused(
+    cands: jax.Array,
+    xs: jax.Array,
+    binv: jax.Array,
+    pmat: jax.Array,
+    lengthscale: float,
+    prior: float,
+) -> jax.Array:
+    """Fused-epilogue ``uncertainty_scores_clients``: the CPU execution path.
+
+    Identical math through the identity
+
+        t1 - 2 t2 + t3 = sum_k [ g1 - (2 cross - c.c) o g2 ]_k h_k,
+
+    which XLA fuses into one elementwise pass + one reduction over the
+    (N, n, cap) intermediates instead of the textbook form's three -- the
+    measured batched-over-vmapped scoring win on CPU (BENCH_kernels.json,
+    ``client_batched``).  The per-element cancellation before the reduction
+    is also the numerically kinder order.  The textbook
+    ``uncertainty_scores_clients`` above stays as the ground-truth oracle
+    the tests compare against; the Pallas tile kernels use this same
+    epilogue (kernels/gp_score.py).
+    """
+    n1 = jnp.sum(cands * cands, axis=-1)  # (N, n)
+    n2 = jnp.sum(xs * xs, axis=-1)  # (N, cap)
+    cross = jnp.einsum("bnd,bcd->bnc", cands, xs)
+    d2 = jnp.maximum(n1[..., None] + n2[:, None, :] - 2.0 * cross, 0.0)
+    h = jnp.exp(-0.5 * d2 / (lengthscale**2))
+    g1 = jnp.einsum("bnc,bck->bnk", h, pmat)
+    g2 = jnp.einsum("bnc,bck->bnk", h, binv)
+    m = g1 - (2.0 * cross - n1[..., None]) * g2
+    corr = jnp.sum(m * h, axis=-1) / (lengthscale**4)
+    return jnp.maximum(prior - corr, 0.0).astype(cands.dtype)
+
+
 def grad_mean_clients(
     cands: jax.Array, xs: jax.Array, alpha: jax.Array, lengthscale: float
 ) -> jax.Array:

@@ -104,6 +104,9 @@ def main() -> None:
                            async_checkpoint=not args.sync_ckpt)
     dt = time.time() - t0
 
+    if jax.process_index() != 0:
+        return  # one progress table per job, not one per host
+
     f = res.f_values
     best = float(jnp.nanmin(f))  # eval-every leaves NaN rows for skipped rounds
     print(f"F(x_0) = {float(f[0]):+.5f}   F(x_R) = {float(f[-1]):+.5f}   "

@@ -30,3 +30,34 @@ def make_host_mesh():
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
+HBM_PER_CHIP = 16e9  # bytes
+
+#: Per-backend roofline constants -- the SINGLE source for both
+#: ``benchmarks/roofline.py`` (communication/FLOP envelopes) and
+#: ``repro.kernels.autotune`` (block-size selection), so the numbers the
+#: bench reports and the numbers the kernels tune against cannot drift.
+#: ``vmem_bytes`` is the fast on-chip working-set budget the kernel tiles
+#: must fit in (v5e VMEM; for CPU an L2-sized stand-in so interpret-mode
+#: block choices stay moderate).  ``_default`` is the conservative entry
+#: used for backends not listed here (see ``autotune.measure_blocks`` for
+#: the measured-sweep escape hatch).
+BACKEND_ROOFLINE = {
+    "tpu": {
+        "peak_flops": PEAK_FLOPS_BF16,
+        "hbm_bw": HBM_BW,
+        "hbm_bytes": HBM_PER_CHIP,
+        "vmem_bytes": 16 * 2**20,
+    },
+    "cpu": {
+        "peak_flops": 100e9,
+        "hbm_bw": 20e9,
+        "hbm_bytes": 16e9,
+        "vmem_bytes": 16 * 2**20,
+    },
+    "_default": {
+        "peak_flops": 100e9,
+        "hbm_bw": 20e9,
+        "hbm_bytes": 16e9,
+        "vmem_bytes": 16 * 2**20,
+    },
+}

@@ -212,6 +212,57 @@ def test_async_writer_reraises_background_error(tmp_path):
     assert hits == [1, 3]
 
 
+def test_async_writer_never_issues_collective_off_main_thread(monkeypatch):
+    """REGRESSION: the sharded layout's _sync barrier is a collective; on a
+    multi-process mesh it must never run on the async writer thread (it
+    would race the main thread's round collectives and deadlock the pod).
+    _sync itself enforces this with a RuntimeError, which the writer
+    re-raises on wait()."""
+    monkeypatch.setattr(ckpt_io.jax, "process_count", lambda: 2)
+    # On the main thread the guard passes (and would proceed to the barrier,
+    # which we stub out -- single-process CI has no multihost runtime).
+    import repro.checkpoint.io as io_mod
+
+    w = ckpt_io.AsyncCheckpointWriter()
+    w.submit(lambda: io_mod._sync("round-1"))
+    with pytest.raises(RuntimeError, match="off the main thread"):
+        w.wait()
+
+
+def test_run_rounds_forces_blocking_writes_multiprocess(monkeypatch, capsys):
+    """async_checkpoint=True on a >1-process mesh must be downgraded to the
+    blocking path with a loud log, not silently honored."""
+    monkeypatch.setattr(rounds_mod.jax, "process_count", lambda: 2)
+    seen = {}
+
+    class NoWriter:
+        def __init__(self):
+            raise AssertionError("async writer must not be constructed on a pod")
+
+    monkeypatch.setattr(rounds_mod.ckpt_io, "AsyncCheckpointWriter", NoWriter)
+
+    # Drive just the writer-selection logic by running one chunk through
+    # alg.simulate (scan driver): checkpoint_dir set, async requested, and a
+    # faked 2-process count.  Checkpoints still land (blocking path).
+    from repro.core import objectives as obj
+
+    cfg = _fzoos_cfg()
+    cobjs = obj.make_quadratic(jax.random.PRNGKey(0), 4, 8, 1.0, 0.0)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        res = alg.simulate(
+            cfg, jax.random.PRNGKey(2), cobjs, obj.quadratic_query,
+            obj.quadratic_global_value, rounds=1, chunk=1,
+            checkpoint_dir=td, checkpoint_every=1, async_checkpoint=True,
+        )
+        assert res is not None
+        seen["files"] = sorted(os.listdir(td))
+    out = capsys.readouterr().out
+    assert "FORCING blocking" in out
+    assert any(f.startswith("step_") for f in seen["files"])
+
+
 def test_run_rounds_sharded_resume_bitwise(tmp_path):
     """End-to-end through run_rounds on a mesh: per-shard checkpoints +
     preemption + resume == the uninterrupted run, exactly (same contract as

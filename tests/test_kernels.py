@@ -323,3 +323,181 @@ def test_padding_invariance_sqexp(n, d, m):
     assert got.shape == (n, m)
     assert bool(jnp.isfinite(got).all())
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref.sqexp(x, v, 0.9)), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Cap-axis tiling (gp_score / gp_grad tiled kernels) + block autotuner
+# ---------------------------------------------------------------------------
+
+def _norm_close(got, want, atol):
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale, atol=atol)
+
+
+@pytest.mark.parametrize("cap,block_cap", [(256, 128), (512, 128), (1024, 256)])
+def test_tiled_scores_match_oracle(cap, block_cap):
+    """Cap-tiled scoring == oracle at caps the resident kernel cannot hold."""
+    n, d = 32, 8
+    cands, xs, binv, pmat, _ = _gp_data(n, d, cap)
+    got = ops.uncertainty_scores(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=32, block_cap=block_cap, force_pallas=True,
+    )
+    want = ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, d / 0.64)
+    _norm_close(got, want, 5e-5)
+
+
+@pytest.mark.parametrize("cap,block_cap", [(512, 128), (1024, 512)])
+def test_tiled_grad_mean_match_oracle(cap, block_cap):
+    n, d = 32, 8
+    cands, xs, _, _, alpha = _gp_data(n, d, cap)
+    got = ops.grad_mean_batch(
+        cands, xs, alpha, lengthscale=0.8,
+        block_n=32, block_cap=block_cap, force_pallas=True,
+    )
+    want = ref.grad_mean_batch(cands, xs, alpha, 0.8)
+    _norm_close(got, want, 5e-5)
+
+
+def test_tiled_clients_match_oracle_cap1024():
+    """Interpret-mode parity at the scale-out target cap=1024, both families."""
+    nb, n, d, cap = 2, 16, 6, 1024
+    cands, xs, binv, pmat, alpha = _gp_data_clients(nb, n, d, cap)
+    got_s = ops.uncertainty_scores_clients(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=16, block_cap=512, force_pallas=True,
+    )
+    _norm_close(got_s, ref.uncertainty_scores_clients(cands, xs, binv, pmat, 0.8, d / 0.64), 5e-5)
+    got_g = ops.grad_mean_clients(
+        cands, xs, alpha, lengthscale=0.8,
+        block_n=16, block_cap=512, force_pallas=True,
+    )
+    _norm_close(got_g, ref.grad_mean_clients(cands, xs, alpha, 0.8), 5e-5)
+
+
+def test_tiled_cap_padding_exact_zero_invariance():
+    """cap NOT a multiple of block_cap: the wrapper zero-pads the trajectory
+    axis.  Padded slots must contribute EXACTLY zero (zero B/P rows+columns
+    for scores, zero alpha for the grad mean), so padding to 256 vs manually
+    padding further to 384 is BITWISE identical -- extra zero tiles only add
+    exact zeros to the f32 accumulators."""
+    n, d, cap = 32, 8, 200  # 200 % 128 != 0 -> wrapper pads to 256
+    cands, xs, binv, pmat, alpha = _gp_data(n, d, cap)
+
+    s_auto = ops.uncertainty_scores(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    xs384 = jnp.pad(xs, ((0, 384 - cap), (0, 0)))
+    b384 = jnp.pad(binv, ((0, 384 - cap), (0, 384 - cap)))
+    p384 = jnp.pad(pmat, ((0, 384 - cap), (0, 384 - cap)))
+    s_manual = ops.uncertainty_scores(
+        cands, xs384, b384, p384, lengthscale=0.8, prior=d / 0.64,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    np.testing.assert_array_equal(np.asarray(s_auto), np.asarray(s_manual))
+    _norm_close(s_auto, ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, d / 0.64), 5e-5)
+
+    g_auto = ops.grad_mean_batch(
+        cands, xs, alpha, lengthscale=0.8, block_n=32, block_cap=128, force_pallas=True
+    )
+    g_manual = ops.grad_mean_batch(
+        cands, xs384, jnp.pad(alpha, (0, 384 - cap)), lengthscale=0.8,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    np.testing.assert_array_equal(np.asarray(g_auto), np.asarray(g_manual))
+    _norm_close(g_auto, ref.grad_mean_batch(cands, xs, alpha, 0.8), 5e-5)
+
+
+def test_tiled_clients_vs_per_client_bit_parity():
+    """The client grid dimension is a pure layout change: the batched tiled
+    kernel must be BITWISE identical to running the single-client tiled
+    kernel once per client with the same blocks."""
+    nb, n, d, cap = 3, 32, 6, 256
+    cands, xs, binv, pmat, alpha = _gp_data_clients(nb, n, d, cap, seed=11)
+    kw = dict(block_n=32, block_cap=128, force_pallas=True)
+    s_batched = ops.uncertainty_scores_clients(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64, **kw
+    )
+    g_batched = ops.grad_mean_clients(cands, xs, alpha, lengthscale=0.8, **kw)
+    for b in range(nb):
+        s_one = ops.uncertainty_scores(
+            cands[b], xs[b], binv[b], pmat[b], lengthscale=0.8, prior=d / 0.64, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(s_batched[b]), np.asarray(s_one))
+        g_one = ops.grad_mean_batch(cands[b], xs[b], alpha[b], lengthscale=0.8, **kw)
+        np.testing.assert_array_equal(np.asarray(g_batched[b]), np.asarray(g_one))
+
+
+def test_fused_epilogue_ref_matches_textbook():
+    """ref.uncertainty_scores_clients_fused (the CPU execution path and the
+    Pallas epilogue) is algebraically identical to the textbook oracle."""
+    for seed, (nb, n, d, cap) in enumerate([(2, 64, 8, 64), (4, 100, 20, 128), (1, 37, 5, 96)]):
+        cands, xs, binv, pmat, _ = _gp_data_clients(nb, n, d, cap, seed=seed)
+        want = ref.uncertainty_scores_clients(cands, xs, binv, pmat, 0.8, d / 0.64)
+        got = ref.uncertainty_scores_clients_fused(cands, xs, binv, pmat, 0.8, d / 0.64)
+        _norm_close(got, want, 2e-5)
+
+
+def test_autotune_deterministic_and_feasible():
+    from repro.kernels import autotune
+
+    autotune.clear_cache()
+    picks = [
+        autotune.select_blocks("score", n=100, cap=1024, d=20, n_clients=64, backend=b)
+        for b in ("tpu", "cpu", "tpu")
+    ]
+    assert picks[0] == picks[2]  # deterministic (and cached)
+    for bn, bc in picks:
+        assert bn in autotune._BLOCK_N_CANDIDATES
+        assert bc in autotune._BLOCK_CAP_CANDIDATES
+    # The scale-out premise: cap=1024 does NOT fit resident on tpu VMEM.
+    assert picks[0][1] < 1024
+    # Small shapes stay resident (no tiling overhead when everything fits).
+    bn, bc = autotune.select_blocks("score", n=100, cap=128, d=20, n_clients=8, backend="tpu")
+    assert bc >= 128
+
+
+def test_autotune_explicit_blocks_override():
+    """AlgoConfig-pinned blocks must bypass the tuner entirely."""
+    n, d, cap = 32, 8, 256
+    cands, xs, binv, pmat, _ = _gp_data(n, d, cap)
+    want = ops.uncertainty_scores(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    # Pin only one of the two: the other comes from the tuner.
+    got = ops.uncertainty_scores(
+        cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+        block_cap=128, force_pallas=True,
+    )
+    _norm_close(got, ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, d / 0.64), 5e-5)
+    assert want.shape == got.shape
+
+
+def test_algo_config_block_overrides_thread_through():
+    """score_block_*/grad_block_* reach the kernels via gp_surrogate without
+    changing results (tiling is value-preserving)."""
+    from repro.core import gp_surrogate as gp
+
+    nb, d, cap = 2, 4, 64
+    key = jax.random.PRNGKey(3)
+    hyper = gp.default_hyper(0.7, 1e-4)
+    trajs = jax.vmap(lambda _: gp.traj_init(cap, d))(jnp.arange(nb))
+    factors = jax.vmap(gp.factor_init, in_axes=(0, None))(trajs, hyper)
+    xs = jax.random.uniform(jax.random.fold_in(key, 0), (nb, 6, d))
+    ys = jnp.sin(xs.sum(-1))
+    trajs, factors = gp.traj_extend_clients(trajs, factors, xs, ys, hyper)
+    xq = jax.random.uniform(jax.random.fold_in(key, 1), (nb, 8, d))
+
+    u_default = gp.grad_uncertainty_batch_cached_clients(trajs, factors, hyper, xq)
+    u_pinned = gp.grad_uncertainty_batch_cached_clients(
+        trajs, factors, hyper, xq, block_n=8, block_cap=128
+    )
+    np.testing.assert_allclose(np.asarray(u_pinned), np.asarray(u_default), atol=1e-5)
+
+    g_default = gp.grad_mean_cached_clients(trajs, factors, hyper, xq[:, 0, :])
+    g_pinned = gp.grad_mean_cached_clients(
+        trajs, factors, hyper, xq[:, 0, :], block_n=8, block_cap=128
+    )
+    np.testing.assert_allclose(np.asarray(g_pinned), np.asarray(g_default), atol=1e-5)
