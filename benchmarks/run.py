@@ -47,6 +47,13 @@ MODULES = {
 _LOWER_BETTER = ("_us", "_ms", "ms_per_round", "ms_per_boundary")
 _HIGHER_BETTER = ("per_sec", "speedup")
 
+#: Keys that are DELIBERATELY informational: meaningful numbers we record
+#: but refuse to gate on (rates move with workload shape, not perf).  Any
+#: direction-less key NOT matched here shows up in the ``ungated:`` summary
+#: that --compare prints per BENCH file, so silently-untracked metrics are
+#: visible instead of vanishing from the regression gate.
+_INFORMATIONAL = ("repair_rate", "refactor_rate")
+
 
 def _metric_direction(key: str) -> str | None:
     """'lower' / 'higher' for perf metrics, None for informational values."""
@@ -55,6 +62,23 @@ def _metric_direction(key: str) -> str | None:
     if any(s in key for s in _HIGHER_BETTER):
         return "higher"
     return None
+
+
+def _is_informational(key: str) -> bool:
+    return any(key.endswith(s) for s in _INFORMATIONAL)
+
+
+def ungated_keys(payload: dict) -> list[str]:
+    """Dotted keys of numeric leaves the regression gate ignores, split out
+    from the explicit allowlist: ``['cap (!)', 'repair_rate']`` style, with
+    ``(!)`` marking keys that are neither gated nor allowlisted."""
+    out = []
+    for key, _ in _walk_metrics(payload):
+        leaf = key.rsplit(".", 1)[-1]
+        if _metric_direction(leaf) is not None:
+            continue
+        out.append(key if _is_informational(leaf) else f"{key} (!)")
+    return sorted(out)
 
 
 def _walk_metrics(payload, prefix=""):
@@ -143,6 +167,9 @@ def main() -> None:
                     regressions.extend(regs)
                     status = f"{len(regs)} regressions vs {path}" if regs else f"no regressions vs {path}"
                     print(f"# {name}: {status}", flush=True)
+                    ungated = ungated_keys(payload)
+                    if ungated:
+                        print(f"# {name}: ungated: " + ", ".join(ungated), flush=True)
                 else:
                     with open(path, "w") as f:
                         json.dump(payload, f, indent=2, sort_keys=True)

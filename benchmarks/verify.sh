@@ -2,6 +2,8 @@
 # CI smoke gate: tier-1 tests + benchmark regression check.
 #
 #   bash benchmarks/verify.sh            # full tier-1 + bench compare
+#   bash benchmarks/verify.sh --static   # static gate only: contract
+#                                        # analyzer + ruff (no execution)
 #   BENCH_TOL=0.5 bash benchmarks/verify.sh
 #   BENCH_ONLY=rounds,kernels bash benchmarks/verify.sh
 #
@@ -11,12 +13,33 @@
 # perf regression fails the PR instead of silently overwriting the JSONs.
 # The default tolerance is deliberately loose (50%): CI boxes are noisy and
 # the gate is for catching engine-level regressions, not 5% drift.
+#
+# --static runs the compiled-program contract analyzer (DESIGN.md Sec. 7:
+# python -m repro.analysis lowers every registered engine entry point and
+# lints jaxpr + HLO, no execution) plus `ruff check` at the version pinned
+# in pyproject.toml.  ruff is not baked into every image, so its absence is
+# a LOUD skip, not a failure -- CI installs it and gets the full gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_TOL="${BENCH_TOL:-0.5}"
 BENCH_ONLY="${BENCH_ONLY:-rounds,kernels}"
+
+if [[ "${1:-}" == "--static" ]]; then
+    echo "== static gate: compiled-program contracts =="
+    python -m repro.analysis
+
+    echo "== static gate: ruff =="
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check .
+    else
+        echo "WARNING: ruff not installed -- SKIPPING the lint half of the" >&2
+        echo "WARNING: static gate (pip install ruff to match CI)" >&2
+    fi
+    echo "verify --static: OK"
+    exit 0
+fi
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q

@@ -1,0 +1,31 @@
+"""Static analysis of the repo's compiled programs (DESIGN.md Sec. 7).
+
+The round engine's correctness story rests on properties of the COMPILED
+program, not just numerics: the deferred-repair body must stay eigh-free,
+the distributed body must keep the declared collective census (the paper's
+communication claim), optimizer updates must preserve param dtypes (the
+PR 4 bf16->f32 bug class), and the buffers `rounds.py` donates must really
+be aliased in the executable.  This package turns those one-off test
+assertions into declared contracts linted WITHOUT executing anything:
+
+  * ``jaxpr_lint``  -- recursive jaxpr walker: forbidden primitives,
+    carry-dtype promotions, host callbacks, collective census;
+  * ``hlo_audit``   -- lowered-HLO auditor: backend custom-call
+    fingerprints (eigh/syev, cholesky/potrf), collective census,
+    input-output aliasing (donation);
+  * ``contracts``   -- the per-engine contract registry + the steady-state
+    recompile/sync guard;
+  * ``runner``      -- ``python -m repro.analysis``: lower every registered
+    (algorithm, engine-flag) combination and report violations with
+    jaxpr source locations.
+"""
+
+from repro.analysis.jaxpr_lint import Violation  # noqa: F401
+from repro.analysis.contracts import (  # noqa: F401
+    CONTRACTS,
+    SteadyStateViolation,
+    check_contract,
+    no_recompiles,
+    steady_state_guard,
+)
+from repro.analysis.runner import check_all, main  # noqa: F401

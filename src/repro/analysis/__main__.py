@@ -1,0 +1,8 @@
+"""``python -m repro.analysis`` -- the static contract lint gate."""
+
+import sys
+
+from repro.analysis.runner import main
+
+if __name__ == "__main__":
+    sys.exit(main())

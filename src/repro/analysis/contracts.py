@@ -1,0 +1,378 @@
+"""Per-engine compiled-program contracts (DESIGN.md Sec. 7).
+
+Each engine configuration DECLARES its invariants here; ``runner.py`` (and
+``python -m repro.analysis``) lowers every registered (algorithm,
+engine-flag) combination from ``AlgoConfig`` -- via the same
+``launch.common.make_config`` surface the launchers use -- and lints the
+jaxpr + lowered HLO against the declaration, without executing anything.
+
+Registered contracts (one line each; detection mechanism in parens):
+
+  * fzoos deferred body, sim + dist: NO eigh (jaxpr primitive + HLO
+    fingerprint), no host callbacks/transfers, no carry-dtype promotion;
+    dist adds the collective census;
+  * fzoos inline oracle body: eigh MUST be present (the oracle exists to
+    demonstrate the contrast) but everything else holds;
+  * fedzo / fedprox (FD family) bodies: eigh-free by construction, census
+    pins 1 array psum (the iterate payload) on the dist path;
+  * chunk step: every donated {ClientState, history} leaf is actually
+    aliased input->output in the lowering (``tf.aliasing_output``);
+  * boundary repair: the repair eigh exists but ONLY behind a cond, and
+    the donated factor buffers alias;
+  * optimizers: sgd/adam/adamw updates preserve bf16 param dtype (the
+    PR 4 drift class, checked on invar/outvar avals).
+
+The census numbers are DECLARED from the communication claim, not
+re-measured: 2 array-payload psums for fzoos (iterate x + RFF weights w =
+the paper's ``d + M`` floats/round), 1 for the FD family (x only), plus 6
+scalar psums (5 RoundStats reductions + the eval pmean, which lowers to a
+psum).  Adding a collective to the round body is a PROTOCOL change and
+must show up here as a deliberate diff.
+
+``steady_state_guard`` / ``no_recompiles`` are the runtime complement: a
+context manager that fails on unexpected executable compiles (cache
+misses) and host ``device_get`` syncs inside a steady-state window --
+subsuming the PR 4 zero-device_get assertion.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from functools import lru_cache
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_audit, jaxpr_lint
+from repro.analysis.jaxpr_lint import Violation
+
+# ---------------------------------------------------------------------------
+# Steady-state guard (recompiles + host syncs)
+# ---------------------------------------------------------------------------
+
+#: Monitoring event jax records once per backend executable compile.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_guard_lock = threading.Lock()
+_active_guards: list["GuardState"] = []
+_listener_installed = False
+
+
+class SteadyStateViolation(AssertionError):
+    """A steady-state window compiled or synced more than its contract allows."""
+
+
+@dataclasses.dataclass
+class GuardState:
+    """Counters exposed to the ``with steady_state_guard() as g`` body."""
+
+    compiles: int = 0
+    device_gets: int = 0
+
+
+def _on_event_duration(event: str, duration: float, **kw) -> None:
+    del duration, kw
+    if event == _COMPILE_EVENT:
+        with _guard_lock:
+            for g in _active_guards:
+                g.compiles += 1
+
+
+def _ensure_listener() -> None:
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+        _listener_installed = True
+
+
+@contextlib.contextmanager
+def steady_state_guard(
+    *,
+    allow_compiles: Optional[int] = None,
+    allow_device_gets: Optional[int] = 0,
+):
+    """Fail if the enclosed code compiles / host-syncs beyond its budget.
+
+    ``allow_compiles``: max executable compiles (compilation-cache misses)
+    tolerated; ``None`` counts but does not enforce.  ``allow_device_gets``
+    likewise for ``jax.device_get`` calls (the chunk-boundary host-sync
+    class PR 4 eliminated).  Yields a ``GuardState`` whose counters are
+    live, so callers can also assert richer conditions themselves.
+    """
+    _ensure_listener()
+    st = GuardState()
+    real_get = jax.device_get
+
+    def spy(x):
+        st.device_gets += 1
+        return real_get(x)
+
+    with _guard_lock:
+        _active_guards.append(st)
+    jax.device_get = spy
+    try:
+        yield st
+    finally:
+        jax.device_get = real_get
+        with _guard_lock:
+            _active_guards.remove(st)
+    if allow_compiles is not None and st.compiles > allow_compiles:
+        raise SteadyStateViolation(
+            f"steady-state window compiled {st.compiles} executable(s) "
+            f"(allowed {allow_compiles}): an executable cache miss is "
+            "re-tracing inside the steady state"
+        )
+    if allow_device_gets is not None and st.device_gets > allow_device_gets:
+        raise SteadyStateViolation(
+            f"steady-state window issued {st.device_gets} jax.device_get "
+            f"sync(s) (allowed {allow_device_gets}): the zero-sync boundary "
+            "contract is broken"
+        )
+
+
+def no_recompiles(allow: int = 0):
+    """Recompile guard only: fail on executable cache misses, ignore syncs."""
+    return steady_state_guard(allow_compiles=allow, allow_device_gets=None)
+
+
+# ---------------------------------------------------------------------------
+# Contract registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """One declared invariant set over one lowered entry point."""
+
+    name: str
+    description: str
+    check: Callable[[], list[Violation]]
+
+
+CONTRACTS: dict[str, Contract] = {}
+
+
+def register(name: str, description: str):
+    def deco(fn: Callable[[], list[Violation]]):
+        CONTRACTS[name] = Contract(name=name, description=description, check=fn)
+        return fn
+
+    return deco
+
+
+def check_contract(name: str) -> list[Violation]:
+    return CONTRACTS[name].check()
+
+
+# -- shared fixtures (small shapes: lint cost, not run cost) ----------------
+
+
+def _make_cfg(algo: str, **overrides):
+    from repro.launch.common import make_config
+
+    base = dict(dim=8, n_clients=4, local_steps=2, lengthscale=0.5)
+    if algo == "fzoos":
+        base.update(n_features=32, traj_capacity=32, active_per_iter=1,
+                    active_candidates=8, active_round_end=1)
+    else:
+        base.update(q=4)
+    base.update(overrides)
+    return make_config(algo, **base)
+
+
+@lru_cache(maxsize=None)
+def _fixture(algo: str, defer_repair: bool):
+    from repro.core import algorithms as alg
+    from repro.core import objectives as obj
+    from repro.core import rff as rfflib
+
+    cfg = _make_cfg(algo, defer_repair=defer_repair)
+    quad = obj.make_quadratic(jax.random.PRNGKey(0), cfg.n_clients, cfg.dim,
+                              2.0, 0.001)
+    x0 = jnp.full((cfg.dim,), 0.5, jnp.float32)
+    rff = None
+    if cfg.is_fzoos:
+        rff = rfflib.make_rff(jax.random.PRNGKey(1), cfg.n_features, cfg.dim,
+                              cfg.lengthscale)
+    states = alg.init_states(cfg, jax.random.PRNGKey(2), x0)
+    return cfg, rff, quad, states, x0
+
+
+@lru_cache(maxsize=None)
+def _mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _chunk_fn(algo: str, defer_repair: bool, distributed: bool, length: int = 2):
+    from repro.core import objectives as obj
+    from repro.core import rounds as rounds_mod
+
+    cfg, rff, quad, states, x0 = _fixture(algo, defer_repair)
+    if distributed:
+        cf = rounds_mod.dist_chunk_fn(cfg, _mesh(), rff, obj.quadratic_query,
+                                      obj.quadratic_global_value, length, 1, 4)
+    else:
+        cf = rounds_mod.sim_chunk_fn(cfg, rff, obj.quadratic_query,
+                                     obj.quadratic_global_value, None, length,
+                                     1, 4)
+    args = (states, quad, x0, jnp.int32(0))
+    return cf, args
+
+
+@lru_cache(maxsize=None)
+def _body_artifacts(algo: str, defer_repair: bool, distributed: bool):
+    """(closed jaxpr, lowered stablehlo text) of one scanned chunk body."""
+    cf, args = _chunk_fn(algo, defer_repair, distributed)
+    closed = jax.make_jaxpr(cf)(*args)
+    text = jax.jit(cf).lower(*args).as_text()
+    return closed, text
+
+
+#: Scalar psums every distributed round body carries: the five RoundStats
+#: reductions (cos, disparity, queries, refactor, repair) + the eval pmean.
+_SCALAR_PSUMS = 6
+
+
+def _body_rules(
+    closed,
+    text,
+    *,
+    expect_eigh: bool,
+    census: Optional[dict[str, int]],
+) -> list[Violation]:
+    out: list[Violation] = []
+    if expect_eigh:
+        # the oracle body must DEMONSTRABLY carry the inline eigh, or the
+        # no-eigh assertions elsewhere are vacuous
+        if not jaxpr_lint.count_primitives(closed, jaxpr_lint.EIGH_PRIMITIVES):
+            out.append(Violation(
+                rule="oracle-eigh-missing",
+                message="inline-cond oracle body lowered WITHOUT eigh; the "
+                        "deferred/inline contrast is no longer being tested",
+            ))
+        if not hlo_audit.contains_eigh(text):
+            out.append(Violation(
+                rule="oracle-eigh-missing",
+                message="inline-cond oracle HLO carries no eigh custom call",
+            ))
+    else:
+        out += jaxpr_lint.find_forbidden(closed, jaxpr_lint.EIGH_PRIMITIVES,
+                                         rule="no-eigh")
+        out += hlo_audit.check_no_eigh(text, where="scanned round body")
+    out += jaxpr_lint.find_host_ops(closed)
+    out += jaxpr_lint.find_carry_promotions(closed)
+    if census is not None:
+        out += jaxpr_lint.check_psum_census(closed, census)
+    else:
+        # the vmapped sim body must stay collective-free outright
+        out += jaxpr_lint.check_psum_census(closed, {})
+    return out
+
+
+def _register_engine(key: str, algo: str, defer_repair: bool,
+                     expect_eigh: bool, n_array_psums: int) -> None:
+    for dist in (False, True):
+        mode = "distributed" if dist else "simulate"
+        census = (
+            {"psum_array": n_array_psums, "psum_scalar": _SCALAR_PSUMS}
+            if dist else None
+        )
+
+        def chk(d=dist, c=census):
+            closed, text = _body_artifacts(algo, defer_repair, d)
+            return _body_rules(closed, text, expect_eigh=expect_eigh, census=c)
+
+        register(
+            f"{key}/{mode}",
+            f"{key} scanned round body ({mode}): "
+            + ("eigh present (oracle)" if expect_eigh else "eigh-free")
+            + ", no host ops, no carry promotion"
+            + (f", census {census}" if census else ", collective-free"),
+        )(chk)
+
+
+# FZooS deferred engine (the default): the tentpole no-eigh contract.
+_register_engine("fzoos-deferred", "fzoos", defer_repair=True,
+                 expect_eigh=False, n_array_psums=2)
+# FZooS inline-cond oracle: eigh must remain visible (contrast witness).
+_register_engine("fzoos-inline", "fzoos", defer_repair=False,
+                 expect_eigh=True, n_array_psums=2)
+# FD family: eigh-free by construction, iterate-only array payload.
+_register_engine("fedzo", "fedzo", defer_repair=True,
+                 expect_eigh=False, n_array_psums=1)
+_register_engine("fd-fedprox", "fedprox", defer_repair=True,
+                 expect_eigh=False, n_array_psums=1)
+
+
+def _chunk_step_donation(distributed: bool) -> list[Violation]:
+    from repro.core import rounds as rounds_mod
+
+    cf, (states, quad, x0, off) = _chunk_fn("fzoos", True, distributed)
+    hist = rounds_mod.history_init(4, x0, jnp.zeros((), jnp.float32))
+    step = rounds_mod.make_chunk_step(cf)
+    text = step.lower(states, hist, quad, x0, off).as_text()
+    n_leaves = len(jax.tree_util.tree_leaves((states, hist)))
+    where = "distributed" if distributed else "simulate"
+    return hlo_audit.check_donation(text, n_leaves, where=f"chunk step ({where})")
+
+
+register(
+    "chunk-step-donation/simulate",
+    "every donated {ClientState, history} leaf aliases input->output",
+)(lambda: _chunk_step_donation(False))
+register(
+    "chunk-step-donation/distributed",
+    "donation survives the shard_map lowering of the chunk step",
+)(lambda: _chunk_step_donation(True))
+
+
+@register(
+    "boundary-repair",
+    "repair eigh exists ONLY behind cond; donated factor buffers alias",
+)
+def _boundary_repair_contract() -> list[Violation]:
+    from repro.core import gp_surrogate as gp
+
+    _, _, _, states, _ = _fixture("fzoos", True)
+    closed = jax.make_jaxpr(gp.factor_repair_gated)(states.factor,
+                                                    jnp.float32(1e-4))
+    out = jaxpr_lint.eigh_only_behind_cond(closed)
+    if not jaxpr_lint.count_primitives(closed, jaxpr_lint.EIGH_PRIMITIVES):
+        out.append(Violation(
+            rule="oracle-eigh-missing",
+            message="boundary repair lost its eigh: flagged Grams would "
+                    "never be refactorized",
+        ))
+    jitted = jax.jit(gp.factor_repair_gated, donate_argnums=0)
+    text = jitted.lower(states.factor, jnp.float32(1e-4)).as_text()
+    n_leaves = len(jax.tree_util.tree_leaves(states.factor))
+    out += hlo_audit.check_donation(text, n_leaves, where="boundary repair")
+    return out
+
+
+@register(
+    "optimizer-dtype",
+    "sgd/adam/adamw updates preserve bf16 param dtype (PR 4 drift class)",
+)
+def _optimizer_dtype_contract() -> list[Violation]:
+    from repro.optim import make_optimizer
+
+    out: list[Violation] = []
+    for name in ("sgd", "adam", "adamw"):
+        opt_init, opt_update = make_optimizer(name)
+        p = jnp.zeros((4,), jnp.bfloat16)
+        state = opt_init(p)
+        g = jnp.zeros((4,), jnp.float32)
+        closed = jax.make_jaxpr(
+            lambda s, gg, pp: opt_update(s, gg, pp, 0.01)
+        )(state, g, p)
+        # flat leaf indices: params are the LAST input leaf; the updated
+        # params are the FIRST output leaf ((new_params, new_state) order)
+        n_in = len(jax.tree_util.tree_leaves((state, g, p)))
+        for v in jaxpr_lint.check_io_dtypes(closed, [(n_in - 1, 0)]):
+            out.append(dataclasses.replace(
+                v, message=f"{name}: {v.message}"))
+    return out

@@ -1,0 +1,163 @@
+"""Lowered-HLO auditor (DESIGN.md Sec. 7).
+
+Checks that only the LOWERED program can answer:
+
+  * **custom-call fingerprints** -- which backend routine a linalg
+    primitive lowers to is backend-specific (``lapack_ssyevd`` on CPU,
+    ``Eigh``/``cusolver_syevd`` elsewhere).  ``eigh_fingerprints()`` /
+    ``cholesky_fingerprints()`` derive the current backend's names ONCE by
+    lowering a probe, so no test or contract hardcodes a fingerprint
+    (previously duplicated inline in test_deferred_repair.py);
+  * **collective census** -- ``stablehlo.all_reduce`` etc. counts in the
+    lowered text, cross-checking the jaxpr-level psum census;
+  * **donation audit** -- every buffer a jit claims to donate must show up
+    as an actual input-output alias (``tf.aliasing_output``) on the
+    lowered main function; XLA silently DROPS donation when shapes/dtypes
+    prevent aliasing (a UserWarning at best), which re-introduces the
+    per-chunk state copy the scan engine exists to avoid.
+"""
+
+from __future__ import annotations
+
+import functools
+import re
+from collections import Counter
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lint import Violation
+
+_CUSTOM_CALL_RE = re.compile(r'custom_call_target\s*=\s*"([^"]+)"')
+_ALIAS_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)")
+_COLLECTIVE_OPS = (
+    "all_reduce", "all_gather", "reduce_scatter", "collective_permute",
+    "all_to_all",
+)
+
+
+def custom_call_targets(hlo_text: str) -> Counter:
+    """Multiset of custom-call target names in a lowered module."""
+    return Counter(_CUSTOM_CALL_RE.findall(hlo_text))
+
+
+def _probe_fingerprints(probe_fn, static_markers: frozenset[str],
+                        substrings: tuple[str, ...]) -> frozenset[str]:
+    probe = jax.jit(probe_fn).lower(jnp.eye(4, dtype=jnp.float32)).as_text()
+    markers = set(custom_call_targets(probe)) | set(static_markers)
+    markers = {m for m in markers if any(s in m.lower() for s in substrings)}
+    if not markers:
+        raise RuntimeError(
+            f"could not fingerprint {substrings} lowering on backend "
+            f"{jax.default_backend()!r}"
+        )
+    return frozenset(markers)
+
+
+@functools.lru_cache(maxsize=None)
+def eigh_fingerprints() -> frozenset[str]:
+    """Backend custom-call names ``jnp.linalg.eigh`` lowers to (plus the
+    cross-backend fallbacks), derived once per process."""
+    return _probe_fingerprints(
+        lambda a: jnp.linalg.eigh(a)[0],
+        frozenset({"Eigh", "syevd"}),
+        ("syev", "eigh"),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def cholesky_fingerprints() -> frozenset[str]:
+    """Backend custom-call names ``jnp.linalg.cholesky`` lowers to."""
+    return _probe_fingerprints(
+        jnp.linalg.cholesky,
+        frozenset({"Cholesky", "potrf"}),
+        ("potrf", "cholesky"),
+    )
+
+
+def found_markers(hlo_text: str, markers: Iterable[str]) -> list[str]:
+    """Which of ``markers`` occur in the lowered text (sorted)."""
+    return sorted(m for m in set(markers) if m in hlo_text)
+
+
+def contains_eigh(hlo_text: str) -> bool:
+    return bool(found_markers(hlo_text, eigh_fingerprints()))
+
+
+def contains_cholesky(hlo_text: str) -> bool:
+    return bool(found_markers(hlo_text, cholesky_fingerprints()))
+
+
+def check_no_eigh(hlo_text: str, where: str = "body") -> list[Violation]:
+    hits = found_markers(hlo_text, eigh_fingerprints())
+    if not hits:
+        return []
+    return [Violation(
+        rule="no-eigh-hlo",
+        message=f"{where} lowers eigh custom calls {hits}: the scanned body "
+                "must stay factorization-free (deferred-repair contract)",
+    )]
+
+
+def collective_census(hlo_text: str) -> dict[str, int]:
+    """Counts of stablehlo collective ops in the lowered text."""
+    return {
+        op: len(re.findall(rf"stablehlo\.{op}\b", hlo_text))
+        for op in _COLLECTIVE_OPS
+    }
+
+
+# ---------------------------------------------------------------------------
+# Donation / aliasing
+# ---------------------------------------------------------------------------
+
+
+def _main_signature(hlo_text: str) -> str:
+    """The argument list of the public @main function (balanced parens)."""
+    m = re.search(r"func\.func\s+public\s+@main\(", hlo_text)
+    if m is None:
+        raise ValueError("lowered module has no public @main function")
+    start = m.end()  # just past the opening paren
+    depth = 1
+    for i in range(start, len(hlo_text)):
+        ch = hlo_text[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return hlo_text[start:i]
+    raise ValueError("unbalanced parens in @main signature")
+
+
+def aliased_inputs(hlo_text: str) -> dict[int, int]:
+    """``{input arg index: output index}`` for every donated-and-aliased
+    input of the lowered main function."""
+    sig = _main_signature(hlo_text)
+    out: dict[int, int] = {}
+    # args are "%argN: tensor<...> {attrs}"; attrs never nest braces.
+    for am in re.finditer(r"%arg(\d+):[^%]*", sig):
+        alias = _ALIAS_RE.search(am.group(0))
+        if alias:
+            out[int(am.group(1))] = int(alias.group(1))
+    return out
+
+
+def check_donation(hlo_text: str, expected_aliased: int, where: str = "executable") -> list[Violation]:
+    """The lowered program must alias exactly ``expected_aliased`` inputs.
+
+    ``expected_aliased`` is the leaf count of the donated arguments (every
+    donated leaf has a shape/dtype-matched output in the engine's
+    state-in/state-out signature, so ALL of them must alias; fewer means
+    XLA dropped a donation and the engine silently double-buffers).
+    """
+    got = aliased_inputs(hlo_text)
+    if len(got) == expected_aliased:
+        return []
+    return [Violation(
+        rule="donation-dropped",
+        message=f"{where}: expected {expected_aliased} input-output aliases "
+                f"but the lowering carries {len(got)} -- a donated buffer "
+                "is being copied instead of reused in place",
+    )]

@@ -1,0 +1,92 @@
+"""Contract runner: ``python -m repro.analysis`` (DESIGN.md Sec. 7).
+
+Lowers every registered (algorithm, engine-flag) combination and lints it
+against its declared contract.  Exit code 0 = every contract clean;
+nonzero = at least one violation, each reported with its rule, context
+path, and jaxpr source location.  Wired into ``benchmarks/verify.sh
+--static`` and CI; the same checks back the tier-1 tests through
+``tests/test_analysis.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Iterable, Optional
+
+from repro.analysis.contracts import CONTRACTS
+from repro.analysis.jaxpr_lint import Violation
+
+
+def check_all(
+    names: Optional[Iterable[str]] = None,
+    *,
+    verbose: bool = False,
+    out=None,
+) -> dict[str, list[Violation]]:
+    """Run the selected (default: all) contracts; return name -> violations.
+
+    ``out`` defaults to the CURRENT ``sys.stdout`` (resolved per call, so
+    stream redirection -- pytest capture, tee'd CI logs -- is honored).
+    """
+    out = out if out is not None else sys.stdout
+    selected = list(names) if names else sorted(CONTRACTS)
+    unknown = [n for n in selected if n not in CONTRACTS]
+    if unknown:
+        raise KeyError(
+            f"unknown contract(s) {unknown}; registered: {sorted(CONTRACTS)}"
+        )
+    results: dict[str, list[Violation]] = {}
+    for name in selected:
+        t0 = time.time()
+        try:
+            violations = CONTRACTS[name].check()
+        except Exception as e:  # lowering itself broke: that IS a violation
+            violations = [Violation(
+                rule="lowering-error",
+                message=f"contract could not lower/lint: {type(e).__name__}: {e}",
+            )]
+        results[name] = violations
+        dt = time.time() - t0
+        if violations:
+            print(f"FAIL {name} ({len(violations)} violation(s), {dt:.1f}s)",
+                  file=out)
+            for v in violations:
+                print(f"     {v}", file=out)
+        else:
+            tag = f"ok   {name}"
+            if verbose:
+                tag += f"  -- {CONTRACTS[name].description} ({dt:.1f}s)"
+            print(tag, file=out)
+    return results
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="lint the compiled round-engine programs against their "
+                    "declared contracts (no execution)",
+    )
+    ap.add_argument("--only", default="",
+                    help="comma-separated contract names (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered contracts and exit")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(CONTRACTS):
+            print(f"{name}: {CONTRACTS[name].description}")
+        return 0
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or None
+    results = check_all(names, verbose=args.verbose)
+    n_bad = sum(1 for v in results.values() if v)
+    n_violations = sum(len(v) for v in results.values())
+    if n_bad:
+        print(f"repro.analysis: {n_bad}/{len(results)} contract(s) violated "
+              f"({n_violations} violation(s))")
+        return 1
+    print(f"repro.analysis: {len(results)} contract(s) clean")
+    return 0

@@ -13,7 +13,6 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 QueryFn = Callable[..., jax.Array]  # (client_obj, x, key) -> noisy scalar
 

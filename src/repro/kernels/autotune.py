@@ -29,9 +29,10 @@ cannot run under a jit trace the way ``select_blocks`` can).
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import jax
+import numpy as np
 
 from repro.launch.mesh import BACKEND_ROOFLINE
 
@@ -52,21 +53,38 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def cache_key(kind: str, backend: str, n_clients: int, n: int, cap: int, d: int):
-    return (backend, kind, n_clients, n, cap, d)
+def _dtype_name(dtype: Any) -> str:
+    """Canonical dtype tag for the cache key / footprint model (f32 default).
+
+    The VMEM-footprint model used to assume f32 implicitly, so a bf16
+    caller would silently reuse f32 block picks under the same key; the
+    dtype is now an explicit key component and feeds the per-word byte
+    width of the model.
+    """
+    return np.dtype(jax.dtypes.canonicalize_dtype(dtype or np.float32)).name
+
+
+def cache_key(kind: str, backend: str, n_clients: int, n: int, cap: int,
+              d: int, dtype: Any = None):
+    return (backend, kind, n_clients, n, cap, d, _dtype_name(dtype))
 
 
 def clear_cache() -> None:
     _CACHE.clear()
 
 
-def _vmem_cell_bytes(kind: str, bn: int, bc: int, d: int) -> int:
-    """Per-grid-cell VMEM working set, f32, x2 for double buffering.
+def _vmem_cell_bytes(kind: str, bn: int, bc: int, d: int,
+                     itemsize: int = 4) -> int:
+    """Per-grid-cell VMEM working set, x2 for double buffering.
 
     score: c tile + two x tiles + two (bc, bc) Gram tiles + the h / cross /
     g1 / g2 (bn, bc) intermediates + the (bn, 1) accumulator.
     grad:  c tile + x tile + alpha row + the (bn, bc) w tile + the (bn, d)
     accumulator + the (bn, 1) running sum.
+    ``itemsize`` is the element byte width of the caller's dtype (4 = the
+    historical f32 assumption; the f32 accumulator scratch is charged at
+    the same width, a deliberate over-estimate that keeps bf16 feasible
+    sets conservative).
     """
     dl = _round_up(d, _LANE)  # minor axes are lane-padded by the compiler
     if kind == "score":
@@ -75,17 +93,18 @@ def _vmem_cell_bytes(kind: str, bn: int, bc: int, d: int) -> int:
         words = bn * dl + bc * dl + bc + 3 * bn * bc + bn * dl + 2 * bn
     else:
         raise ValueError(f"unknown kernel kind {kind!r}")
-    return 2 * 4 * words
+    return 2 * itemsize * words
 
 
-def _cell_cost(kind: str, bn: int, bc: int, d: int, hw: dict) -> float:
+def _cell_cost(kind: str, bn: int, bc: int, d: int, hw: dict,
+               itemsize: int = 4) -> float:
     """max(compute, memory) seconds for ONE grid cell."""
     if kind == "score":
         flops = 2 * 2 * bn * bc * d + 2 * 2 * bn * bc * bc + 8 * bn * bc
-        bytes_ = 4 * (bn * d + 2 * bc * d + 2 * bc * bc + bn)
+        bytes_ = itemsize * (bn * d + 2 * bc * d + 2 * bc * bc + bn)
     else:
         flops = 2 * 2 * bn * bc * d + 6 * bn * bc
-        bytes_ = 4 * (bn * d + bc * d + bc + bn * d)
+        bytes_ = itemsize * (bn * d + bc * d + bc + bn * d)
     return max(flops / hw["peak_flops"], bytes_ / hw["hbm_bw"])
 
 
@@ -96,7 +115,8 @@ def _grid_cells(kind: str, bn: int, bc: int, n: int, cap: int, n_clients: int) -
     return n_clients * per_client
 
 
-def _feasible(kind: str, n: int, cap: int, d: int, hw: dict):
+def _feasible(kind: str, n: int, cap: int, d: int, hw: dict,
+              itemsize: int = 4):
     budget = 0.75 * hw["vmem_bytes"]
     for bn in _BLOCK_N_CANDIDATES:
         if bn > _round_up(max(n, 1), _SUBLANE):
@@ -104,7 +124,7 @@ def _feasible(kind: str, n: int, cap: int, d: int, hw: dict):
         for bc in _BLOCK_CAP_CANDIDATES:
             if bc > _round_up(max(cap, 1), _LANE):
                 continue
-            if _vmem_cell_bytes(kind, bn, bc, d) <= budget:
+            if _vmem_cell_bytes(kind, bn, bc, d, itemsize) <= budget:
                 yield bn, bc
 
 
@@ -116,22 +136,28 @@ def select_blocks(
     d: int,
     n_clients: int = 1,
     backend: Optional[str] = None,
+    dtype: Any = None,
 ) -> tuple[int, int]:
     """Deterministic ``(block_n, block_cap)`` for a kernel ``kind``/shape.
 
     ``kind`` is ``"score"`` (uncertainty scoring) or ``"grad"`` (grad mean);
     ``n`` is the per-client candidate count, ``cap`` the trajectory ring
     capacity, ``d`` the search dimension, ``n_clients`` the client batch.
+    ``dtype`` is the element dtype of the kernel operands (default f32 --
+    bitwise-identical picks to the pre-dtype model for every f32 caller);
+    narrower dtypes widen the feasible set and shift the roofline balance,
+    and are cached under their own key.
     """
     backend = backend or jax.default_backend()
-    key = cache_key(kind, backend, n_clients, n, cap, d)
+    key = cache_key(kind, backend, n_clients, n, cap, d, dtype)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
+    itemsize = np.dtype(_dtype_name(dtype)).itemsize
     hw = BACKEND_ROOFLINE.get(backend, BACKEND_ROOFLINE["_default"])
     best: Optional[tuple[float, tuple[int, int]]] = None
-    for bn, bc in _feasible(kind, n, cap, d, hw):
-        cost = _cell_cost(kind, bn, bc, d, hw) * _grid_cells(kind, bn, bc, n, cap, n_clients)
+    for bn, bc in _feasible(kind, n, cap, d, hw, itemsize):
+        cost = _cell_cost(kind, bn, bc, d, hw, itemsize) * _grid_cells(kind, bn, bc, n, cap, n_clients)
         # Deterministic tie-break: prefer LARGER tiles at equal modeled cost
         # (fewer grid cells, less accumulator traffic the model can't see).
         cand = (cost, (bn, bc))
@@ -152,6 +178,7 @@ def measure_blocks(
     d: int,
     n_clients: int = 1,
     backend: Optional[str] = None,
+    dtype: Any = None,
     candidates: Optional[Iterable[tuple[int, int]]] = None,
     reps: int = 3,
 ) -> tuple[int, int]:
@@ -163,8 +190,9 @@ def measure_blocks(
     """
     backend = backend or jax.default_backend()
     hw = BACKEND_ROOFLINE.get(backend, BACKEND_ROOFLINE["_default"])
+    itemsize = np.dtype(_dtype_name(dtype)).itemsize
     cands = list(candidates) if candidates is not None else list(
-        _feasible(kind, n, cap, d, hw)
+        _feasible(kind, n, cap, d, hw, itemsize)
     )
     if not cands:
         cands = [(_SUBLANE, _LANE)]
@@ -178,5 +206,5 @@ def measure_blocks(
             dt = min(dt, time.perf_counter() - t0)
         if best is None or dt < best[0]:
             best = (dt, (bn, bc))
-    _CACHE[cache_key(kind, backend, n_clients, n, cap, d)] = best[1]
+    _CACHE[cache_key(kind, backend, n_clients, n, cap, d, dtype)] = best[1]
     return best[1]

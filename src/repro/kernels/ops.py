@@ -16,8 +16,6 @@ alpha for the grad mean), so tiling never perturbs results.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -93,10 +91,12 @@ def _pad_gram(a: jax.Array, target: int) -> jax.Array:
     return _pad_axis(_pad_axis(a, a.ndim - 1, target), a.ndim - 2, target)
 
 
-def _resolve_blocks(kind, n, cap, d, n_clients, block_n, block_cap):
+def _resolve_blocks(kind, n, cap, d, n_clients, block_n, block_cap, dtype=None):
     """Fill in unset block sizes from the deterministic autotuner."""
     if block_n is None or block_cap is None:
-        bn, bc = autotune.select_blocks(kind, n=n, cap=cap, d=d, n_clients=n_clients)
+        bn, bc = autotune.select_blocks(
+            kind, n=n, cap=cap, d=d, n_clients=n_clients, dtype=dtype
+        )
         block_n = bn if block_n is None else block_n
         block_cap = bc if block_cap is None else block_cap
     return block_n, block_cap
@@ -201,7 +201,9 @@ def uncertainty_scores(
         return ref.uncertainty_scores(cands, xs, binv, pmat, lengthscale, prior)
     n, d = cands.shape
     cap = xs.shape[0]
-    block_n, block_cap = _resolve_blocks("score", n, cap, d, 1, block_n, block_cap)
+    block_n, block_cap = _resolve_blocks(
+        "score", n, cap, d, 1, block_n, block_cap, dtype=cands.dtype
+    )
     npad = _round_up(n, block_n)
     interpret = not _on_tpu()
     if block_cap >= cap:
@@ -248,7 +250,9 @@ def uncertainty_scores_clients(
         )
     nb, n, d = cands.shape
     cap = xs.shape[1]
-    block_n, block_cap = _resolve_blocks("score", n, cap, d, nb, block_n, block_cap)
+    block_n, block_cap = _resolve_blocks(
+        "score", n, cap, d, nb, block_n, block_cap, dtype=cands.dtype
+    )
     npad = _round_up(n, block_n)
     interpret = not _on_tpu()
     if block_cap >= cap:
@@ -288,7 +292,9 @@ def grad_mean_clients(
         return ref.grad_mean_clients(cands, xs, alpha, lengthscale)
     nb, n, d = cands.shape
     cap = xs.shape[1]
-    block_n, block_cap = _resolve_blocks("grad", n, cap, d, nb, block_n, block_cap)
+    block_n, block_cap = _resolve_blocks(
+        "grad", n, cap, d, nb, block_n, block_cap, dtype=cands.dtype
+    )
     npad = _round_up(n, block_n)
     interpret = not _on_tpu()
     if block_cap >= cap:
@@ -330,7 +336,9 @@ def grad_mean_batch(
         return ref.grad_mean_batch(cands, xs, alpha, lengthscale)
     n, d = cands.shape
     cap = xs.shape[0]
-    block_n, block_cap = _resolve_blocks("grad", n, cap, d, 1, block_n, block_cap)
+    block_n, block_cap = _resolve_blocks(
+        "grad", n, cap, d, 1, block_n, block_cap, dtype=cands.dtype
+    )
     npad = _round_up(n, block_n)
     interpret = not _on_tpu()
     if block_cap >= cap:

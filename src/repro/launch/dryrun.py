@@ -23,14 +23,12 @@ benchmarks/roofline.py turns these into the three roofline terms.
 
 import argparse
 import json
-import math
 import re
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_production_mesh

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, restore_train_state, save_train_state
 from repro.configs import ARCH_IDS, get_config

@@ -16,7 +16,7 @@ frame/patch embeddings of the right shape.
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -488,7 +488,6 @@ def decode_step(
 ) -> tuple[jax.Array, DecodeCache]:
     """One-token decode.  token (B, 1) int32 -> (logits (B, V), cache)."""
     pos = cache.pos
-    bsz = token.shape[0]
     x = _embed(p, cfg, token)
     window = cfg.sliding_window
     bp_all = _block_params(p)

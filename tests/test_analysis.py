@@ -1,0 +1,279 @@
+"""Static-analysis subsystem tests (repro.analysis, DESIGN.md Sec. 7).
+
+Two halves:
+
+  * **negative suite** -- one deliberately-violating program per rule
+    (inline eigh in a scan body, bf16 carry promoted, un-donated buffer,
+    extra psum vs the declared census, host callback in a scanned body),
+    each caught WITH a jaxpr source location pointing at this file;
+  * **positive gate** -- every shipping contract in the registry lints
+    clean, and the ``python -m repro.analysis`` CLI round-trips.
+"""
+
+import io
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    SteadyStateViolation,
+    check_all,
+    no_recompiles,
+    steady_state_guard,
+)
+from repro.analysis import hlo_audit, jaxpr_lint
+
+
+# ---------------------------------------------------------------------------
+# Negative suite: each rule catches its seeded violation
+# ---------------------------------------------------------------------------
+
+
+def test_inline_eigh_in_scan_body_caught():
+    def body(c, _):
+        w, _v = jnp.linalg.eigh(c)  # the violation under test
+        return c + jnp.diag(w), None
+
+    closed = jax.make_jaxpr(
+        lambda c: jax.lax.scan(body, c, None, length=2)
+    )(jnp.eye(3, dtype=jnp.float32))
+    vs = jaxpr_lint.find_forbidden(closed, jaxpr_lint.EIGH_PRIMITIVES,
+                                   rule="no-eigh")
+    assert len(vs) == 1
+    assert vs[0].rule == "no-eigh"
+    assert "scan" in vs[0].path  # located inside the scanned body
+    assert "test_analysis" in vs[0].source  # points at repo source, not soup
+
+
+def test_bf16_carry_promotion_caught():
+    def body(p, g):
+        p32 = p.astype(jnp.float32)  # the PR 4 drift signature
+        return (p32 - 0.1 * g).astype(jnp.bfloat16), None
+
+    gs = jnp.zeros((3, 4), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda p: jax.lax.scan(body, p, gs)
+    )(jnp.zeros((4,), jnp.bfloat16))
+    vs = jaxpr_lint.find_carry_promotions(closed)
+    assert len(vs) == 1
+    assert vs[0].rule == "carry-promotion"
+    assert "bfloat16" in vs[0].message and "float32" in vs[0].message
+    assert "test_analysis" in vs[0].source
+    # the clean version of the same update lints clean
+    def ok_body(p, g):
+        return p - (0.1 * g).astype(p.dtype), None
+    clean = jax.make_jaxpr(
+        lambda p: jax.lax.scan(ok_body, p, gs)
+    )(jnp.zeros((4,), jnp.bfloat16))
+    assert jaxpr_lint.find_carry_promotions(clean) == []
+
+
+def test_dropped_donation_caught():
+    """XLA silently drops a donation whose output has no shape/dtype-matched
+    buffer; the audit turns the silence into a violation."""
+    def f(a):
+        return a.astype(jnp.float32) + 1.0
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # jax warns about the unused donation
+        txt = jax.jit(f, donate_argnums=0).lower(
+            jnp.zeros((4,), jnp.bfloat16)).as_text()
+    assert hlo_audit.aliased_inputs(txt) == {}
+    vs = hlo_audit.check_donation(txt, expected_aliased=1, where="seeded")
+    assert len(vs) == 1 and vs[0].rule == "donation-dropped"
+
+    # control: a dtype-preserving donated update aliases and lints clean
+    txt_ok = jax.jit(lambda a: a + 1, donate_argnums=0).lower(
+        jnp.zeros((4,), jnp.float32)).as_text()
+    assert hlo_audit.check_donation(txt_ok, expected_aliased=1) == []
+
+
+def test_extra_psum_vs_census_caught():
+    def f(x):
+        return jax.lax.psum(x, "i") + jax.lax.psum(x.sum(), "i")
+
+    closed = jax.make_jaxpr(f, axis_env=[("i", 2)])(jnp.zeros((4,), jnp.float32))
+    assert jaxpr_lint.psum_census(closed) == {"psum_array": 1, "psum_scalar": 1}
+    assert jaxpr_lint.check_psum_census(
+        closed, {"psum_array": 1, "psum_scalar": 1}) == []
+    # declaring only the array psum makes the scalar one a violation...
+    vs = jaxpr_lint.check_psum_census(closed, {"psum_array": 1})
+    assert [v.rule for v in vs] == ["collective-census"]
+    assert "psum_scalar" in vs[0].message
+    # ...and a MISSING declared collective is equally a violation
+    vs2 = jaxpr_lint.check_psum_census(
+        closed, {"psum_array": 2, "psum_scalar": 1})
+    assert len(vs2) == 1 and "psum_array" in vs2[0].message
+
+
+def test_host_callback_in_scan_body_caught():
+    def body(c, _):
+        y = jax.pure_callback(
+            lambda v: np.sin(v), jax.ShapeDtypeStruct((), jnp.float32), c)
+        return c + y, None
+
+    closed = jax.make_jaxpr(
+        lambda c: jax.lax.scan(body, c, None, length=3)
+    )(jnp.float32(0.0))
+    vs = jaxpr_lint.find_host_ops(closed)
+    assert any(v.rule == "host-op" and "pure_callback" in v.message
+               and "scan" in v.path for v in vs)
+
+
+def test_io_dtype_drift_caught():
+    closed = jax.make_jaxpr(
+        lambda p, g: (p.astype(jnp.float32) - g, None)
+    )(jnp.zeros((4,), jnp.bfloat16), jnp.zeros((4,), jnp.float32))
+    vs = jaxpr_lint.check_io_dtypes(closed, [(0, 0)])
+    assert len(vs) == 1 and vs[0].rule == "dtype-drift"
+    assert jaxpr_lint.check_io_dtypes(closed, [(1, 0)]) == []  # f32 -> f32
+
+
+def test_ungated_eigh_caught():
+    """eigh outside any cond: the steady state would pay it unconditionally."""
+    closed = jax.make_jaxpr(lambda a: jnp.linalg.eigh(a)[0])(jnp.eye(3))
+    vs = jaxpr_lint.eigh_only_behind_cond(closed)
+    assert len(vs) == 1 and vs[0].rule == "eigh-not-gated"
+
+    gated = jax.make_jaxpr(
+        lambda a, flag: jax.lax.cond(
+            flag, lambda m: jnp.linalg.eigh(m)[0], lambda m: m[:, 0], a)
+    )(jnp.eye(3), jnp.asarray(True))
+    assert jaxpr_lint.eigh_only_behind_cond(gated) == []
+
+
+def test_fingerprints_are_shared_and_nonempty():
+    """The probe-derived fingerprints back every eigh assertion in the repo;
+    they must resolve on this backend and match a live eigh lowering."""
+    markers = hlo_audit.eigh_fingerprints()
+    assert markers and all(isinstance(m, str) for m in markers)
+    txt = jax.jit(lambda a: jnp.linalg.eigh(a)[0]).lower(jnp.eye(4)).as_text()
+    assert hlo_audit.contains_eigh(txt)
+    assert hlo_audit.found_markers(txt, markers)
+    assert not hlo_audit.contains_eigh("stablehlo.add only")
+    assert hlo_audit.cholesky_fingerprints()
+
+
+# ---------------------------------------------------------------------------
+# Steady-state guard
+# ---------------------------------------------------------------------------
+
+
+def test_guard_catches_device_get():
+    x = jnp.zeros(())
+    with pytest.raises(SteadyStateViolation, match="device_get"):
+        with steady_state_guard(allow_compiles=None, allow_device_gets=0):
+            jax.device_get(x)
+
+
+def test_guard_counts_within_budget():
+    x = jnp.zeros(())
+    with steady_state_guard(allow_compiles=None, allow_device_gets=2) as g:
+        jax.device_get(x)
+    assert g.device_gets == 1
+
+
+def test_no_recompiles_guard():
+    f = jax.jit(lambda x: x * 2 + 1)
+    a, b = jnp.zeros((3,)), jnp.zeros((5,))
+    f(a).block_until_ready()  # warm the (3,) executable outside the guard
+    with no_recompiles() as g:
+        f(a).block_until_ready()  # cache hit: no fresh compile
+    assert g.compiles == 0
+    with pytest.raises(SteadyStateViolation, match="compiled"):
+        with no_recompiles():
+            f(b).block_until_ready()  # new shape: fresh executable
+
+
+def test_guard_restores_device_get_on_error():
+    real = jax.device_get
+    with pytest.raises(RuntimeError, match="boom"):
+        with steady_state_guard(allow_device_gets=0):
+            raise RuntimeError("boom")
+    assert jax.device_get is real
+
+
+# ---------------------------------------------------------------------------
+# Positive gate: the shipping contracts + the CLI
+# ---------------------------------------------------------------------------
+
+
+def test_all_shipping_contracts_clean():
+    """Every registered contract lints clean -- the same gate
+    ``python -m repro.analysis`` applies in verify.sh/CI."""
+    results = check_all(out=io.StringIO())
+    bad = {k: [str(v) for v in vs] for k, vs in results.items() if vs}
+    assert not bad, bad
+
+
+def test_check_all_rejects_unknown_contract():
+    with pytest.raises(KeyError, match="unknown contract"):
+        check_all(["no-such-contract"], out=io.StringIO())
+
+
+def test_runner_exits_nonzero_on_violation(capsys):
+    """A violating contract turns into exit code 1 with a source-located
+    report (registered transiently; the shipping registry stays clean)."""
+    from repro.analysis.contracts import CONTRACTS, register
+    from repro.analysis.runner import main
+
+    def seeded():
+        def body(c, _):
+            return c + jnp.diag(jnp.linalg.eigh(c)[0]), None
+        closed = jax.make_jaxpr(
+            lambda c: jax.lax.scan(body, c, None, length=2))(jnp.eye(3))
+        return jaxpr_lint.find_forbidden(closed, jaxpr_lint.EIGH_PRIMITIVES,
+                                         rule="no-eigh")
+
+    name = "test-seeded-violation"
+    register(name, "transient negative fixture")(seeded)
+    try:
+        rc = main(["--only", name])
+    finally:
+        del CONTRACTS[name]
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL test-seeded-violation" in out
+    assert "no-eigh" in out and "test_analysis" in out  # source-located
+    assert "1/1 contract(s) violated" in out
+
+
+def test_runner_wraps_lowering_errors(capsys):
+    from repro.analysis.contracts import CONTRACTS, register
+    from repro.analysis.runner import main
+
+    name = "test-broken-contract"
+    register(name, "raises instead of lowering")(
+        lambda: (_ for _ in ()).throw(RuntimeError("broken fixture")))
+    try:
+        rc = main(["--only", name])
+    finally:
+        del CONTRACTS[name]
+    assert rc == 1
+    assert "lowering-error" in capsys.readouterr().out
+
+
+def test_cli_smoke():
+    """`python -m repro.analysis --list` and a single cheap contract run in a
+    fresh interpreter (forced onto CPU so the probe never touches a TPU)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(repo, "src"))
+    listing = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list"],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert listing.returncode == 0, listing.stderr
+    assert "fzoos-deferred/simulate" in listing.stdout
+    single = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--only", "optimizer-dtype"],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert single.returncode == 0, single.stdout + single.stderr
+    assert "1 contract(s) clean" in single.stdout

@@ -1,7 +1,6 @@
 """Unit tests for the dry-run analysis machinery (no 512-device init --
 pure parsing/extrapolation logic)."""
 
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import (

@@ -458,6 +458,29 @@ def test_autotune_deterministic_and_feasible():
     assert bc >= 128
 
 
+def test_autotune_dtype_keys_cache_and_default_is_f32():
+    """The tuner cache distinguishes dtypes; omitting dtype == explicit f32
+    (bitwise-identical picks for every pre-dtype caller)."""
+    from repro.kernels import autotune
+
+    autotune.clear_cache()
+    shape = dict(n=64, cap=2048, d=16, n_clients=4, backend="tpu")
+    default = autotune.select_blocks("score", **shape)
+    explicit = autotune.select_blocks("score", **shape, dtype=jnp.float32)
+    assert default == explicit
+    # Distinct key components per dtype, f32 key == no-dtype key.
+    kf = autotune.cache_key("score", "tpu", 4, 64, 2048, 16)
+    assert kf == autotune.cache_key("score", "tpu", 4, 64, 2048, 16, jnp.float32)
+    kb = autotune.cache_key("score", "tpu", 4, 64, 2048, 16, jnp.bfloat16)
+    assert kf != kb
+    # Both entries coexist in the cache; the bf16 feasibility set is at
+    # least as large (halved working set), so its pick is independent.
+    bf16 = autotune.select_blocks("score", **shape, dtype=jnp.bfloat16)
+    assert kf in autotune._CACHE and kb in autotune._CACHE
+    assert bf16[0] in autotune._BLOCK_N_CANDIDATES
+    assert bf16[1] in autotune._BLOCK_CAP_CANDIDATES
+
+
 def test_autotune_explicit_blocks_override():
     """AlgoConfig-pinned blocks must bypass the tuner entirely."""
     n, d, cap = 32, 8, 256

@@ -253,3 +253,26 @@ def test_history_shapes_and_initial_row(quad):
     per_round = cfg.queries_per_round()
     np.testing.assert_array_equal(
         np.asarray(res.queries), per_round * np.arange(1, 6, dtype=np.float32))
+
+
+def test_engine_contracts_clean():
+    """The scan engine's structural invariants -- eigh-free deferred body,
+    the declared psum census, chunk-step donation -- are DECLARED in
+    ``repro.analysis.contracts`` and linted there; the tier-1 suite routes
+    the engine-level ones through that registry instead of keeping ad-hoc
+    jaxpr/HLO assertions here."""
+    import io
+
+    from repro.analysis import check_all
+
+    results = check_all(
+        [
+            "fzoos-deferred/simulate",
+            "fzoos-deferred/distributed",
+            "chunk-step-donation/simulate",
+            "chunk-step-donation/distributed",
+        ],
+        out=io.StringIO(),
+    )
+    bad = {k: v for k, v in results.items() if v}
+    assert not bad, bad

@@ -1,7 +1,6 @@
 """Substrate tests: optimizers, schedules, data pipeline, partitioners,
 checkpointing, sharding rules."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -130,7 +129,7 @@ def test_checkpoint_roundtrip_with_bf16(tmp_path):
         "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
         "nested": {"b": jnp.ones((4,), jnp.float32), "step": jnp.asarray(3, jnp.int32)},
     }
-    path = save(str(tmp_path), tree, step=7)
+    save(str(tmp_path), tree, step=7)
     assert latest_step(str(tmp_path)) == 7
     back = restore(str(tmp_path), tree, step=7)
     for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):

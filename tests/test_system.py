@@ -4,7 +4,6 @@ LM training substrate, and serving -- the whole stack wired together."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import algorithms as alg
 from repro.core import model_objectives as mobj
