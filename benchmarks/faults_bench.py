@@ -1,0 +1,201 @@
+"""Fault-tolerant engine benchmark (ISSUE 8 tentpole): the cost of the
+masked participation-weighted aggregation, and the recovery machinery.
+
+Three questions, one config (N=64 clients, the engine-comparison scale):
+
+  * **mask overhead** -- the faults-off engine (``faults=None``, the
+    structurally unchanged pre-fault path) vs the fault-tolerant engine
+    with ALL rates zero (``--fault-tolerance``): the masking, count
+    packing and renormalized psum mean with nothing ever faulted.  The
+    zero-rate draws lower to static constants, so this measures the pure
+    arithmetic of the mask/renorm path -- the ISSUE's "~0 at N=64" claim.
+    Both ms/round numbers are gated in CI; the ratio is informational.
+  * **faulted throughput** -- the same engine under the ISSUE acceptance
+    fault mix (20% dropout + 5% NaN payloads): masked aggregation with
+    live fault draws, quarantine set/reset traffic, and the per-chunk
+    gated reset dispatch.  Deterministic schedule, so the measured
+    drop/quarantine rates are stable across runs (informational).
+  * **recovery latency** -- the dominant cost of a chunk rollback: the
+    checkpoint restore (npz read + checksum verify + device_put of the
+    full ClientState + history).  Wall-clock file I/O, machine-dependent:
+    informational ``_msec``, not gated.
+
+Like ``rounds_bench``, every timed loop runs around ONE pre-warmed donated
+chunk step so compile time stays out of the measurement; best-of-REPEATS.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.checkpoint import io as ckpt_io
+from repro.core import algorithms as alg
+from repro.core import objectives as obj
+from repro.core import rff as rfflib
+from repro.core import rounds as rounds_mod
+from repro.faults import FaultConfig
+from repro.launch import common as launch_common
+
+_JSON_PAYLOAD: dict = {}
+
+CHUNK = 8
+DIM = 4
+N_CLIENTS = 64
+REPEATS = 3
+
+#: moderate per-round fzoos compute (the boundary-bench config): enough
+#: surrogate work that the round time is real, small enough that the
+#: masked-aggregation delta is not drowned by eigh noise.
+FAULT_CFG = dict(local_steps=1, n_features=32, traj_capacity=64,
+                 active_per_iter=2, active_candidates=32,
+                 active_round_end=2, lengthscale=0.5, noise=1e-5)
+
+#: the ISSUE acceptance fault mix: 20% dropout + 5% NaN payloads.
+FAULT_MIX = dict(seed=0, drop_rate=0.2, nan_rate=0.05, tolerate=True)
+
+
+def json_payload() -> dict:
+    return _JSON_PAYLOAD
+
+
+def _setup():
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, N_CLIENTS, DIM, 5.0, 0.001)
+    cfg = launch_common.make_config("fzoos", dim=DIM, n_clients=N_CLIENTS,
+                                    **FAULT_CFG)
+    x0 = jnp.full((DIM,), 0.5, jnp.float32)
+    rff = rfflib.make_rff(jax.random.PRNGKey(1), cfg.n_features, DIM,
+                          cfg.lengthscale)
+    return cfg, cobjs, rff, x0
+
+
+def _bench_engine(faults: FaultConfig | None, rounds: int) -> dict:
+    """Steady-state ms/round of the simulated vmapped fzoos engine, with the
+    per-chunk boundary quarantine-reset dispatch included when tolerant
+    (that gated cond IS part of the fault-tolerant driver loop)."""
+    cfg, cobjs, rff, x0 = _setup()
+    query, gval = obj.quadratic_query, obj.quadratic_global_value
+    tolerant = faults is not None and faults.tolerate
+
+    step = rounds_mod.make_chunk_step(
+        rounds_mod.sim_chunk_fn(cfg, rff, query, gval, None, CHUNK,
+                                faults=faults)
+    )
+
+    def fresh():
+        states = alg.init_states(cfg, jax.random.PRNGKey(2), x0)
+        hist = rounds_mod.history_init(rounds, x0, gval(cobjs, x0))
+        return states, hist
+
+    s_w, h_w = fresh()
+    s_w, h_w, sx_w = step(s_w, h_w, cobjs, x0, jnp.int32(0))  # compile chunk
+    if tolerant:
+        s_w = rounds_mod.boundary_quarantine_reset(s_w, cfg, sx_w)  # compile
+    jax.block_until_ready(s_w.x)
+
+    def time_once() -> tuple[float, alg.SimResult]:
+        states, hist = fresh()
+        jax.block_until_ready((states.x, hist.xs))
+        sx = x0
+        t0 = time.time()
+        for off in range(0, rounds, CHUNK):
+            states, hist, sx = step(states, hist, cobjs, sx, jnp.int32(off))
+            if tolerant:
+                states = rounds_mod.boundary_quarantine_reset(states, cfg, sx)
+        jax.block_until_ready(hist.xs)
+        return time.time() - t0, hist
+
+    best, hist = float("inf"), None
+    for _ in range(REPEATS):
+        dt, hist = time_once()
+        best = min(best, dt)
+    pr = best / rounds
+    return {
+        "n_clients": N_CLIENTS,
+        "ms_per_round": pr * 1e3,
+        "rounds_per_sec": 1.0 / pr,
+        "drop_rate": float(jnp.mean(hist.drop_rate[:rounds])),
+        "quarantine_rate": float(jnp.mean(hist.quarantine_rate[:rounds])),
+        "rounds_measured": rounds,
+    }
+
+
+def _bench_recovery(rounds: int) -> dict:
+    """Rollback recovery cost: restore a boundary checkpoint of the full
+    N=64 ClientState + history from disk back onto devices.  This is what a
+    poisoned chunk pays on top of re-running it with tolerance forced on."""
+    cfg, cobjs, rff, x0 = _setup()
+    states = alg.init_states(cfg, jax.random.PRNGKey(2), x0)
+    hist = rounds_mod.history_init(rounds, x0,
+                                   obj.quadratic_global_value(cobjs, x0))
+    jax.block_until_ready(states.x)
+    with tempfile.TemporaryDirectory() as td:
+        ckpt_io.save_round_state(td, CHUNK, states, hist)
+        # warm-up read (page cache, jit of device_put paths)
+        ckpt_io.restore_round_state(td, states, hist)
+        best = float("inf")
+        for _ in range(REPEATS):
+            t0 = time.time()
+            s, h, step = ckpt_io.restore_round_state(td, states, hist)
+            jax.block_until_ready((s.x, h.xs))
+            best = min(best, time.time() - t0)
+    return {"recovery_restore_msec": best * 1e3, "restored_step": int(step)}
+
+
+def run(quick: bool) -> list[Row]:
+    rounds = 2 * CHUNK if quick else 4 * CHUNK
+    rows: list[Row] = []
+    _JSON_PAYLOAD.clear()
+    _JSON_PAYLOAD.update({
+        "chunk": CHUNK, "dim": DIM, "n_clients": N_CLIENTS,
+        "engine_config": dict(FAULT_CFG), "fault_mix": dict(FAULT_MIX),
+        "quick": bool(quick),
+    })
+
+    m_off = _bench_engine(None, rounds)
+    m_mask = _bench_engine(FaultConfig(seed=0, tolerate=True), rounds)
+    m_fault = _bench_engine(FaultConfig(**FAULT_MIX), rounds)
+    rec = _bench_recovery(rounds)
+
+    overhead = m_mask["ms_per_round"] / m_off["ms_per_round"]
+    _JSON_PAYLOAD["mask_overhead_n64"] = {
+        "faults_off_ms_per_round": m_off["ms_per_round"],
+        "masked_ms_per_round": m_mask["ms_per_round"],
+        "faults_off_rounds_per_sec": m_off["rounds_per_sec"],
+        "masked_rounds_per_sec": m_mask["rounds_per_sec"],
+        "mask_overhead_ratio": overhead,
+        "n_clients": N_CLIENTS,
+        "rounds_measured": rounds,
+    }
+    _JSON_PAYLOAD["faulted_n64"] = m_fault
+    _JSON_PAYLOAD["recovery"] = rec
+
+    rows.append(Row(
+        name="faults_off_n64",
+        us_per_call=m_off["ms_per_round"] * 1e3,
+        derived=f"rounds_per_sec={m_off['rounds_per_sec']:.2f}",
+    ))
+    rows.append(Row(
+        name="faults_masked_zero_rate_n64",
+        us_per_call=m_mask["ms_per_round"] * 1e3,
+        derived=(f"rounds_per_sec={m_mask['rounds_per_sec']:.2f};"
+                 f"mask_overhead_ratio={overhead:.3f}x"),
+    ))
+    rows.append(Row(
+        name="faults_drop20_nan5_n64",
+        us_per_call=m_fault["ms_per_round"] * 1e3,
+        derived=(f"rounds_per_sec={m_fault['rounds_per_sec']:.2f};"
+                 f"drop_rate={m_fault['drop_rate']:.3f};"
+                 f"quarantine_rate={m_fault['quarantine_rate']:.3f}"),
+    ))
+    rows.append(Row(
+        name="faults_recovery_restore",
+        us_per_call=rec["recovery_restore_msec"] * 1e3,
+        derived=f"restored_step={rec['restored_step']}",
+    ))
+    return rows

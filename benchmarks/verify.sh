@@ -4,6 +4,8 @@
 #   bash benchmarks/verify.sh            # full tier-1 + bench compare
 #   bash benchmarks/verify.sh --static   # static gate only: contract
 #                                        # analyzer + ruff (no execution)
+#   bash benchmarks/verify.sh --faults   # fault-tolerance gate: the fault
+#                                        # test suite + BENCH_faults compare
 #   BENCH_TOL=0.5 bash benchmarks/verify.sh
 #   BENCH_ONLY=rounds,kernels bash benchmarks/verify.sh
 #
@@ -38,6 +40,22 @@ if [[ "${1:-}" == "--static" ]]; then
         echo "WARNING: static gate (pip install ruff to match CI)" >&2
     fi
     echo "verify --static: OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--faults" ]]; then
+    # Robustness gate (ISSUE 8): the fault-injection suite end to end --
+    # deterministic schedules, faults-off bitwise identity, quarantine
+    # reset vs the fresh-init oracle, corrupt-checkpoint fallback and
+    # chunk rollback -- then the masked-aggregation overhead compare
+    # against the committed BENCH_faults.json.
+    echo "== fault-tolerance gate: test suite =="
+    python -m pytest -x -q tests/test_faults.py
+
+    echo "== fault-tolerance gate: mask-overhead regression =="
+    python -m benchmarks.run --only faults --compare --compare-tol "${BENCH_TOL}"
+
+    echo "verify --faults: OK"
     exit 0
 fi
 

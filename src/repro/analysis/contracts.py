@@ -15,10 +15,18 @@ Registered contracts (one line each; detection mechanism in parens):
     demonstrate the contrast) but everything else holds;
   * fedzo / fedprox (FD family) bodies: eigh-free by construction, census
     pins 1 array psum (the iterate payload) on the dist path;
+  * fzoos/fedzo FAULT-MASKED bodies, sim + dist: same rules AND the same
+    collective census as the unmasked engines -- the live/quarantine counts
+    ride inside the existing payload psums, so fault masking adds zero
+    collectives and zero host ops to the round;
   * chunk step: every donated {ClientState, history} leaf is actually
-    aliased input->output in the lowering (``tf.aliasing_output``);
+    aliased input->output in the lowering (``tf.aliasing_output``), with
+    and without the fault mask;
   * boundary repair: the repair eigh exists but ONLY behind a cond, and
     the donated factor buffers alias;
+  * quarantine reset: the device-decided re-admission gate traces NO
+    init-time linear algebra (the fresh-client template is eager) and
+    donates the stacked state;
   * optimizers: sgd/adam/adamw updates preserve bf16 param dtype (the
     PR 4 drift class, checked on invar/outvar avals).
 
@@ -206,26 +214,39 @@ def _mesh():
     return jax.make_mesh((1,), ("data",))
 
 
-def _chunk_fn(algo: str, defer_repair: bool, distributed: bool, length: int = 2):
+def _fault_fixture():
+    """The tolerant fault schedule every faulted contract lowers with:
+    nonzero drop + poison rates so the mask, the packed-count payload and
+    the quarantine logic are all live in the traced program."""
+    from repro.faults import FaultConfig
+
+    return FaultConfig(seed=0, drop_rate=0.25, nan_rate=0.25, tolerate=True)
+
+
+def _chunk_fn(algo: str, defer_repair: bool, distributed: bool, length: int = 2,
+              faulted: bool = False):
     from repro.core import objectives as obj
     from repro.core import rounds as rounds_mod
 
     cfg, rff, quad, states, x0 = _fixture(algo, defer_repair)
+    faults = _fault_fixture() if faulted else None
     if distributed:
         cf = rounds_mod.dist_chunk_fn(cfg, _mesh(), rff, obj.quadratic_query,
-                                      obj.quadratic_global_value, length, 1, 4)
+                                      obj.quadratic_global_value, length, 1, 4,
+                                      faults=faults)
     else:
         cf = rounds_mod.sim_chunk_fn(cfg, rff, obj.quadratic_query,
                                      obj.quadratic_global_value, None, length,
-                                     1, 4)
+                                     1, 4, faults=faults)
     args = (states, quad, x0, jnp.int32(0))
     return cf, args
 
 
 @lru_cache(maxsize=None)
-def _body_artifacts(algo: str, defer_repair: bool, distributed: bool):
+def _body_artifacts(algo: str, defer_repair: bool, distributed: bool,
+                    faulted: bool = False):
     """(closed jaxpr, lowered stablehlo text) of one scanned chunk body."""
-    cf, args = _chunk_fn(algo, defer_repair, distributed)
+    cf, args = _chunk_fn(algo, defer_repair, distributed, faulted=faulted)
     closed = jax.make_jaxpr(cf)(*args)
     text = jax.jit(cf).lower(*args).as_text()
     return closed, text
@@ -273,7 +294,8 @@ def _body_rules(
 
 
 def _register_engine(key: str, algo: str, defer_repair: bool,
-                     expect_eigh: bool, n_array_psums: int) -> None:
+                     expect_eigh: bool, n_array_psums: int,
+                     faulted: bool = False) -> None:
     for dist in (False, True):
         mode = "distributed" if dist else "simulate"
         census = (
@@ -282,7 +304,7 @@ def _register_engine(key: str, algo: str, defer_repair: bool,
         )
 
         def chk(d=dist, c=census):
-            closed, text = _body_artifacts(algo, defer_repair, d)
+            closed, text = _body_artifacts(algo, defer_repair, d, faulted)
             return _body_rules(closed, text, expect_eigh=expect_eigh, census=c)
 
         register(
@@ -305,17 +327,27 @@ _register_engine("fedzo", "fedzo", defer_repair=True,
                  expect_eigh=False, n_array_psums=1)
 _register_engine("fd-fedprox", "fedprox", defer_repair=True,
                  expect_eigh=False, n_array_psums=1)
+# Fault-masked engines: the census is UNCHANGED vs the unmasked bodies --
+# the live/quarantine counts ride inside the existing payload psums, so
+# masking adds zero collectives (and zero host ops) to the round.
+_register_engine("fzoos-faults", "fzoos", defer_repair=True,
+                 expect_eigh=False, n_array_psums=2, faulted=True)
+_register_engine("fedzo-faults", "fedzo", defer_repair=True,
+                 expect_eigh=False, n_array_psums=1, faulted=True)
 
 
-def _chunk_step_donation(distributed: bool) -> list[Violation]:
+def _chunk_step_donation(distributed: bool, faulted: bool = False) -> list[Violation]:
     from repro.core import rounds as rounds_mod
 
-    cf, (states, quad, x0, off) = _chunk_fn("fzoos", True, distributed)
+    cf, (states, quad, x0, off) = _chunk_fn("fzoos", True, distributed,
+                                            faulted=faulted)
     hist = rounds_mod.history_init(4, x0, jnp.zeros((), jnp.float32))
     step = rounds_mod.make_chunk_step(cf)
     text = step.lower(states, hist, quad, x0, off).as_text()
     n_leaves = len(jax.tree_util.tree_leaves((states, hist)))
     where = "distributed" if distributed else "simulate"
+    if faulted:
+        where += ", faulted"
     return hlo_audit.check_donation(text, n_leaves, where=f"chunk step ({where})")
 
 
@@ -327,6 +359,36 @@ register(
     "chunk-step-donation/distributed",
     "donation survives the shard_map lowering of the chunk step",
 )(lambda: _chunk_step_donation(True))
+register(
+    "chunk-step-donation/faulted",
+    "the fault-masked chunk step (incl. mask/quarantine leaves) still "
+    "donates every {ClientState, history} leaf",
+)(lambda: _chunk_step_donation(False, faulted=True))
+register(
+    "chunk-step-donation/faulted-distributed",
+    "faulted chunk-step donation survives the shard_map lowering",
+)(lambda: _chunk_step_donation(True, faulted=True))
+
+
+@register(
+    "quarantine-reset",
+    "device-decided quarantine reset: NO init-time linear algebra traced "
+    "(eager template), no host ops; donated state leaves alias",
+)
+def _quarantine_reset_contract() -> list[Violation]:
+    from repro.core import rounds as rounds_mod
+
+    cfg, _, _, states, x0 = _fixture("fzoos", True)
+    fn = rounds_mod._quarantine_reset_exec(cfg, None, states.x.shape)
+    closed = jax.make_jaxpr(fn)(states, x0)
+    out = jaxpr_lint.find_forbidden(closed, jaxpr_lint.EIGH_PRIMITIVES,
+                                    rule="no-eigh")
+    out += jaxpr_lint.find_host_ops(closed)
+    text = fn.lower(states, x0).as_text()
+    out += hlo_audit.check_no_eigh(text, where="quarantine reset")
+    n_leaves = len(jax.tree_util.tree_leaves(states))
+    out += hlo_audit.check_donation(text, n_leaves, where="quarantine reset")
+    return out
 
 
 @register(

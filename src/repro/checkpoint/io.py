@@ -38,6 +38,8 @@ import os
 import re
 import shutil
 import threading
+import time
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -46,6 +48,39 @@ import numpy as np
 
 _BF16 = "bfloat16"
 _SHARDED_LAYOUT = "sharded-v1"
+
+
+class CorruptCheckpointError(ValueError):
+    """A checkpoint step exists but its contents fail an integrity check:
+    truncated/unreadable ``arrays.npz``, a zip-member CRC failure (flipped
+    bytes), a per-leaf manifest checksum mismatch, or a missing member.
+    ``rounds._restore_newest_good`` catches this and falls back to the
+    next-older step instead of dying on a torn write."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    """Stable content checksum of one stored (already-tagged) array."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _load_npz(path: str):
+    """np.load with corruption mapped to ``CorruptCheckpointError`` (a
+    truncated file presents as a bad zip central directory)."""
+    try:
+        return np.load(path)
+    except Exception as e:  # noqa: BLE001 - any load failure = corrupt file
+        raise CorruptCheckpointError(f"unreadable arrays file {path!r}: {e}") from e
+
+
+def _npz_member(data, key: str, path: str) -> np.ndarray:
+    """One npz member; zipfile verifies the member CRC on read, so flipped
+    payload bytes surface here as ``CorruptCheckpointError``."""
+    try:
+        return data[key]
+    except KeyError as e:
+        raise CorruptCheckpointError(f"missing array {key!r} in {path!r}") from e
+    except Exception as e:  # noqa: BLE001 - zip CRC / decompress failures
+        raise CorruptCheckpointError(f"corrupt array {key!r} in {path!r}: {e}") from e
 
 
 def _np_tag(arr: np.ndarray) -> tuple[np.ndarray, str]:
@@ -93,7 +128,13 @@ def _check_leaf(i: int, got_shape, got_tag: str, want) -> None:
 
 
 def _flatten_to_host(tree: Any) -> tuple[dict, dict]:
-    """(npz arrays, meta) for one pytree -- the device_get half of a save."""
+    """(npz arrays, meta) for one pytree -- the device_get half of a save.
+
+    Deliberately does NOT compute the per-leaf checksums: the snapshot half
+    runs on the driver's timed boundary path (``prepare_round_state``),
+    while the crc is file-integrity metadata that belongs with the file
+    I/O -- ``_with_checksums`` adds it at write time, on the background
+    writer thread for async round checkpoints."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     arrays, tags = {}, []
     for i, leaf in enumerate(leaves):
@@ -102,6 +143,14 @@ def _flatten_to_host(tree: Any) -> tuple[dict, dict]:
         tags.append(tag)
     meta = {"treedef": str(treedef), "n_leaves": len(leaves), "dtypes": tags}
     return arrays, meta
+
+
+def _with_checksums(meta: dict, arrays: dict) -> dict:
+    """meta + per-leaf content CRCs, ordered ``leaf_0..leaf_{n-1}``."""
+    out = dict(meta)
+    out["checksums"] = [int(_crc(arrays[f"leaf_{i}"]))
+                        for i in range(meta["n_leaves"])]
+    return out
 
 
 def _write_step_dir(path: str, populate: Callable[[str], None]) -> str:
@@ -125,6 +174,7 @@ def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None 
     if step is not None:
         path = os.path.join(path, f"step_{step:08d}")
     arrays, meta = _flatten_to_host(tree)
+    meta = _with_checksums(meta, arrays)
     if step is not None:
         meta["step"] = step
     if extra_meta:
@@ -139,35 +189,52 @@ def save(path: str, tree: Any, step: int | None = None, extra_meta: dict | None 
 
 
 def restore(path: str, like: Any, step: int | None = None) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (shape/dtype validated).
+
+    Integrity is verified end to end: a truncated ``arrays.npz`` or a failed
+    zip-member CRC raises ``CorruptCheckpointError``, and when the meta
+    records per-leaf ``checksums`` (every checkpoint since they were added)
+    each restored leaf's content CRC is re-checked against them."""
     if step is not None:
         path = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    apath = os.path.join(path, "arrays.npz")
+    data = _load_npz(apath)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     if len(leaves_like) != meta["n_leaves"]:
         raise ValueError(
             f"checkpoint has {meta['n_leaves']} leaves, template has {len(leaves_like)}"
         )
+    sums = meta.get("checksums")
     leaves = []
     for i, want in enumerate(leaves_like):
-        raw, tag = data[f"leaf_{i}"], meta["dtypes"][i]
+        raw, tag = _npz_member(data, f"leaf_{i}", apath), meta["dtypes"][i]
+        if sums is not None and _crc(raw) != sums[i]:
+            raise CorruptCheckpointError(
+                f"checksum mismatch at leaf {i} in {apath!r}"
+            )
         got = _np_from_tag(raw, tag)
         _check_leaf(i, got.shape, str(got.dtype), want)
         leaves.append(_from_numpy(raw, tag))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def latest_step(root: str) -> int | None:
+def list_steps(root: str) -> list[int]:
+    """All COMPLETE checkpoint step numbers under ``root``, ascending
+    (``*.tmp`` directories from torn writes never match)."""
     if not os.path.isdir(root):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for d in os.listdir(root)
         if (m := re.fullmatch(r"step_(\d+)", d))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
 
 
 def save_train_state(root: str, step: int, params, opt_state, metrics: dict | None = None) -> str:
@@ -313,6 +380,8 @@ def prepare_round_state(states, history, mesh=None) -> dict:
         },
         "hist": {"treedef": str(h_def), "n_leaves": len(h_leaves), "dtypes": h_tags},
     }
+    # checksums are added by write_round_state (background thread): the crc
+    # is write-time file metadata, not part of the timed boundary snapshot
     shard_meta = {
         "shard": jax.process_index(),
         "row_start": int(rows[0]),
@@ -332,7 +401,7 @@ def write_round_state(root: str, round_idx: int, payload: dict,
     access -- safe on a background thread (``AsyncCheckpointWriter``)."""
     path = os.path.join(root, f"step_{round_idx:08d}")
     if payload["layout"] == "single":
-        meta = dict(payload["meta"])
+        meta = _with_checksums(payload["meta"], payload["arrays"])
         meta["step"] = round_idx
         if extra_meta:
             meta["extra"] = extra_meta
@@ -353,8 +422,11 @@ def write_round_state(root: str, round_idx: int, payload: dict,
     sdir = os.path.join(tmp, f"shard_{payload['shard_meta']['shard']:05d}")
     os.makedirs(sdir, exist_ok=True)  # exist_ok: concurrent process creation
     np.savez(os.path.join(sdir, "arrays.npz"), **payload["arrays"])
+    shard_meta = dict(payload["shard_meta"])
+    shard_meta["checksums"] = {k: int(_crc(a))
+                               for k, a in payload["arrays"].items()}
     with open(os.path.join(sdir, "shard.json"), "w") as f:
-        json.dump(payload["shard_meta"], f)
+        json.dump(shard_meta, f)
     _sync(f"shards-{round_idx}")
     if jax.process_index() == 0:
         manifest = dict(payload["manifest"])
@@ -450,8 +522,18 @@ def restore_round_state(root: str, states_like, hist_like, step: int | None = No
     sdir = os.path.join(path, f"shard_{jax.process_index():05d}")
     with open(os.path.join(sdir, "shard.json")) as f:
         shard_meta = json.load(f)
-    data = np.load(os.path.join(sdir, "arrays.npz"))
+    apath = os.path.join(sdir, "arrays.npz")
+    data = _load_npz(apath)
     row_start, row_stop = shard_meta["row_start"], shard_meta["row_stop"]
+    sums = shard_meta.get("checksums") or {}
+
+    def member(key: str) -> np.ndarray:
+        raw = _npz_member(data, key, apath)
+        if key in sums and _crc(raw) != sums[key]:
+            raise CorruptCheckpointError(
+                f"checksum mismatch at {key!r} in {apath!r}"
+            )
+        return raw
 
     s_like, s_def = jax.tree_util.tree_flatten(states_like)
     if len(s_like) != meta["states"]["n_leaves"]:
@@ -461,7 +543,7 @@ def restore_round_state(root: str, states_like, hist_like, step: int | None = No
         )
     s_leaves = []
     for i, want in enumerate(s_like):
-        block = _np_from_tag(data[f"states_{i}"], meta["states"]["dtypes"][i])
+        block = _np_from_tag(member(f"states_{i}"), meta["states"]["dtypes"][i])
         got_shape = (meta["states"]["global_rows"],) + tuple(block.shape[1:])
         _check_leaf(i, got_shape, str(block.dtype), want)
         if block.shape[0] != row_stop - row_start:
@@ -480,7 +562,7 @@ def restore_round_state(root: str, states_like, hist_like, step: int | None = No
         )
     h_leaves = []
     for i, want in enumerate(h_like):
-        got = _np_from_tag(data[f"hist_{i}"], meta["hist"]["dtypes"][i])
+        got = _np_from_tag(member(f"hist_{i}"), meta["hist"]["dtypes"][i])
         _check_leaf(i, got.shape, str(got.dtype), want)
         h_leaves.append(jax.device_put(got, rshard))
     hist = jax.tree_util.tree_unflatten(h_def, h_leaves)
@@ -496,17 +578,38 @@ class AsyncCheckpointWriter:
     hit -- a failing checkpoint must fail the run, not be swallowed by a
     daemon thread.  ``wait()`` drains the writer; the driver calls it before
     returning so the final checkpoint is durable when ``run_rounds`` exits.
+
+    TRANSIENT I/O errors (``OSError``: a flaky network filesystem, a brief
+    ENOSPC) are retried on the writer thread with capped exponential backoff
+    (``retries`` extra attempts, ``backoff_s`` doubling up to
+    ``max_backoff_s``); only the final failure surfaces.  Non-I/O errors
+    are never retried.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, retries: int = 2, backoff_s: float = 0.1,
+                 max_backoff_s: float = 2.0) -> None:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._retries = retries
+        self._backoff_s = backoff_s
+        self._max_backoff_s = max_backoff_s
 
     def _run(self, fn: Callable[[], Any]) -> None:
-        try:
-            fn()
-        except BaseException as e:  # noqa: BLE001 - re-raised on the main thread
-            self._error = e
+        delay, attempt = self._backoff_s, 0
+        while True:
+            try:
+                fn()
+                return
+            except OSError as e:
+                if attempt >= self._retries:
+                    self._error = e  # re-raised on the main thread
+                    return
+                attempt += 1
+                time.sleep(min(delay, self._max_backoff_s))
+                delay *= 2
+            except BaseException as e:  # noqa: BLE001 - re-raised on the main thread
+                self._error = e
+                return
 
     def submit(self, fn: Callable[[], Any]) -> None:
         self.wait()

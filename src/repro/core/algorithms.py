@@ -152,6 +152,9 @@ class ClientState(NamedTuple):
     opt: Any  # local optimizer state
     queries: jax.Array  # () int32 cumulative per-client query counter
     key: jax.Array
+    client_id: jax.Array  # () int32 global client identity (fault schedules)
+    quarantined: jax.Array  # () bool -- excluded from aggregation until the
+    #   chunk-boundary re-init (the fault-tolerance analogue of needs_repair)
 
 
 class RoundStats(NamedTuple):
@@ -161,13 +164,16 @@ class RoundStats(NamedTuple):
     queries_per_client: jax.Array  # () mean cumulative queries
     refactor_rate: jax.Array  # () mean clamped-eigh fallbacks / factor updates
     repair_rate: jax.Array  # () fraction of clients flagged needs_repair
+    drop_rate: jax.Array  # () fraction of clients NOT contributing this round
+    quarantine_rate: jax.Array  # () fraction of clients quarantined
 
 
 def _hyper_of(cfg: AlgoConfig) -> gp.GPHyper:
     return gp.GPHyper(jnp.asarray(cfg.lengthscale), jnp.asarray(cfg.noise))
 
 
-def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientState:
+def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array,
+                      client_id: int | jax.Array = 0) -> ClientState:
     cap = cfg.traj_capacity if cfg.is_fzoos else 1
     m = cfg.n_features if cfg.is_fzoos else 1
     qd = cfg.q if cfg.name == "scaffold2" else 1
@@ -189,13 +195,16 @@ def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientS
         opt=opt_init(x0),
         queries=jnp.zeros((), jnp.int32),
         key=key,
+        client_id=jnp.asarray(client_id, jnp.int32),
+        quarantined=jnp.zeros((), bool),
     )
 
 
 def init_states(cfg: AlgoConfig, key: jax.Array, x0: jax.Array) -> ClientState:
     """Stacked states for all clients (leading axis N)."""
     keys = jax.random.split(key, cfg.n_clients)
-    return jax.vmap(lambda k: init_client_state(cfg, k, x0))(keys)
+    ids = jnp.arange(cfg.n_clients, dtype=jnp.int32)
+    return jax.vmap(lambda k, i: init_client_state(cfg, k, x0, i))(keys, ids)
 
 
 # ---------------------------------------------------------------------------
@@ -457,8 +466,33 @@ def run_round(
     server_x: jax.Array,  # (d,)
     mean_fn: MeanFn,  # server aggregation over ALL clients
     diag_global_grad: Optional[Callable[[jax.Array], jax.Array]] = None,
+    *,
+    sum_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    faults=None,  # Optional[faults.FaultConfig]
+    round_idx: Optional[jax.Array] = None,
 ) -> tuple[ClientState, RoundStats]:
+    """One communication round.
+
+    With ``faults=None`` (the default) this is structurally the fault-free
+    engine: no mask ops are traced and the output is bitwise what it was
+    before the fault layer existed.  With a ``faults.FaultConfig``, fault
+    draws for ``round_idx`` are injected and (when ``faults.tolerate``) the
+    aggregations switch to masked participation-weighted means renormalized
+    by the live-client count: the live mask and the quarantine count ride
+    INSIDE the existing payload arrays (one extra row of the concatenated
+    psum operand), so masking adds ZERO collectives to the round
+    (analysis/contracts.py pins the census).  ``sum_fn`` must then be the
+    un-normalized global sum (``federated.client_sum_fn`` on a mesh; plain
+    axis-0 sum under vmap simulation).
+    """
     opt_init, _ = make_optimizer(cfg.optimizer)
+    draws = None
+    if faults is not None:
+        if sum_fn is None or round_idx is None:
+            raise ValueError("faults injection requires sum_fn and round_idx")
+        from repro.faults import draw_faults  # deferred: keep import DAG slim
+
+        draws = draw_faults(faults, round_idx, states.client_id)
 
     # ---- prologue: broadcast x_r, reset local optimizers ----
     def prologue(st: ClientState, cobj) -> ClientState:
@@ -477,6 +511,11 @@ def run_round(
         c_glob = mean_fn(states.c_local)
         states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
 
+    # Post-prologue snapshot: faulted clients (dropped / straggling /
+    # quarantined) roll their local state back to this point at round end --
+    # a client that did not deliver an update must not advance.
+    states0 = states if faults is not None else None
+
     # ---- T local steps on every client in parallel ----
     if cfg.deferred:
         # Deferred-repair engine: branch-free factor updates, client-batched
@@ -491,7 +530,42 @@ def run_round(
         )(cobjs, states)
 
     # ---- server aggregation of the iterates (line 7/9 of Algo. 1/2) ----
-    new_server_x = mean_fn(states.x)
+    zero = jnp.zeros((), jnp.float32)
+    live = quar = n_live = n_quar = None
+    if faults is None:
+        new_server_x = mean_fn(states.x)
+    else:
+        # Inject the payload faults on the UPDATE, never on the state: the
+        # client's own state stays finite and is rolled back below.
+        x_up = states.x
+        if faults.nan_rate > 0:
+            x_up = jnp.where(draws.nan[:, None], jnp.float32(jnp.nan), x_up)
+        if faults.inf_rate > 0:
+            x_up = jnp.where(draws.inf[:, None], jnp.float32(jnp.inf), x_up)
+        # straggler: the server sees its STALE iterate (this round's broadcast)
+        x_up = jnp.where(draws.straggle[:, None], server_x, x_up)
+        if faults.tolerate:
+            # On-device liveness + health mask.  NOTE: jnp.where, never
+            # multiply-by-mask -- NaN * 0 is NaN and would defeat the mask.
+            finite = jnp.all(jnp.isfinite(x_up), axis=-1)
+            quar = states.quarantined | (~finite & ~draws.drop)
+            live = ~draws.drop & ~states.quarantined & finite
+            # The live count and quarantine census ride as two extra rows of
+            # the SAME psum operand: masking adds zero collectives.
+            payload = jnp.concatenate(
+                [jnp.where(live[:, None], x_up, 0.0),
+                 live.astype(jnp.float32)[:, None],
+                 quar.astype(jnp.float32)[:, None]], axis=1)
+            tot = sum_fn(payload)
+            n_live, n_quar = tot[cfg.dim], tot[cfg.dim + 1]
+            new_server_x = jnp.where(
+                n_live > 0, tot[: cfg.dim] / jnp.maximum(n_live, 1.0), server_x)
+        else:
+            # No tolerance: a dropped client is simply never heard from, and
+            # the dense mean treats silence as NaN -- the poisoning failure
+            # mode the masked path removes (and the rollback demo trigger).
+            x_up = jnp.where(draws.drop[:, None], jnp.float32(jnp.nan), x_up)
+            new_server_x = sum_fn(x_up) / cfg.n_clients
 
     # ---- post phase ----
     def post(st: ClientState, cobj) -> ClientState:
@@ -537,26 +611,104 @@ def run_round(
     else:
         states = jax.vmap(post)(states, cobjs)
 
+    # ---- fault response: roll faulted clients back to the round prologue ----
+    if faults is not None and faults.tolerate:
+        # A client that did not deliver (drop/straggle) or is quarantined
+        # keeps its pre-round state -- its trajectory, factors, w and RNG
+        # stream advance only on rounds it actually completes.
+        frozen = draws.drop | draws.straggle | quar
+
+        def _freeze(old, new):
+            f = frozen.reshape(frozen.shape + (1,) * (new.ndim - 1))
+            return jnp.where(f, old, new)
+
+        states = jax.tree_util.tree_map(_freeze, states0, states)
+        states = states._replace(quarantined=quar)
+
     # ---- second aggregation: w (FZooS) / control variates (scaffold2) ----
     if cfg.is_fzoos:
-        w_glob = mean_fn(states.w_local)
+        if faults is not None and faults.tolerate:
+            # stragglers contribute their (stale) w; quarantined and dropped
+            # clients are masked out, count packed into the same psum operand
+            m_w = ~draws.drop & ~quar
+            w_pay = jnp.concatenate(
+                [jnp.where(m_w[:, None], states.w_local, 0.0),
+                 m_w.astype(jnp.float32)[:, None]], axis=1)
+            w_tot = sum_fn(w_pay)
+            w_glob = jnp.where(
+                w_tot[-1] > 0, w_tot[:-1] / jnp.maximum(w_tot[-1], 1.0),
+                # all clients dead: keep the previous global w (replicated
+                # rows, so the LOCAL mean is the global value -- no psum)
+                jnp.mean(states.w_global, axis=0))
+        else:
+            w_glob = mean_fn(states.w_local)
         states = states._replace(w_global=jnp.broadcast_to(w_glob, states.w_global.shape))
     elif cfg.name == "scaffold2":
         c_glob = mean_fn(states.c_local)
         states = states._replace(c_global=jnp.broadcast_to(c_glob, states.c_global.shape))
 
+    # ---- round stats (masked means over live clients under faults) ----
+    if faults is None:
+        agg = mean_fn
+        drop_rate, quarantine_rate = zero, zero
+    elif faults.tolerate:
+        denom = jnp.maximum(n_live, 1.0)
+        agg = lambda v: sum_fn(jnp.where(live, v, 0.0)) / denom
+        drop_rate = 1.0 - n_live / cfg.n_clients
+        quarantine_rate = n_quar / cfg.n_clients
+    else:
+        agg = mean_fn
+        drop_rate = sum_fn(draws.drop.astype(jnp.float32)) / cfg.n_clients
+        quarantine_rate = zero
+
     stats = RoundStats(
         server_x=new_server_x,
-        mean_cos=mean_fn(sum_cos) / cfg.local_steps,
-        mean_disparity=mean_fn(sum_disp) / cfg.local_steps,
-        queries_per_client=mean_fn(states.queries.astype(jnp.float32)),
-        refactor_rate=mean_fn(
+        mean_cos=agg(sum_cos) / cfg.local_steps,
+        mean_disparity=agg(sum_disp) / cfg.local_steps,
+        queries_per_client=agg(states.queries.astype(jnp.float32)),
+        refactor_rate=agg(
             states.factor.n_refactors.astype(jnp.float32)
             / jnp.maximum(states.factor.n_updates.astype(jnp.float32), 1.0)
         ),
-        repair_rate=mean_fn(states.factor.needs_repair.astype(jnp.float32)),
+        repair_rate=agg(states.factor.needs_repair.astype(jnp.float32)),
+        drop_rate=drop_rate,
+        quarantine_rate=quarantine_rate,
     )
     return states, stats
+
+
+def make_quarantine_reset(cfg: AlgoConfig):
+    """Build ``reset(states, server_x)``: re-initialize quarantined clients
+    from the global iterate (chunk-boundary recovery, DESIGN.md Sec. 8).
+
+    The fresh-client template (empty trajectory, its Gram factorization, the
+    shared FD bank) is computed EAGERLY here -- it does not depend on the
+    traced ``server_x`` -- so the compiled reset contains no cholesky/eigh at
+    all (contract-checked).  A quarantined client keeps its identity, RNG
+    stream, cumulative query count and the replicated ``w_global``;
+    everything else (iterate, trajectory, factor, local weights, optimizer)
+    restarts as a fresh client joining at ``server_x``.
+    """
+    template = init_client_state(cfg, jax.random.PRNGKey(0),
+                                 jnp.zeros((cfg.dim,), jnp.float32))
+    opt_init, _ = make_optimizer(cfg.optimizer)
+
+    def reset(states: ClientState, server_x: jax.Array) -> ClientState:
+        flag = states.quarantined
+        fresh = template._replace(x=server_x, opt=opt_init(server_x))
+
+        def sel(old, new):
+            f = flag.reshape(flag.shape + (1,) * (old.ndim - 1))
+            return jnp.where(f, jnp.broadcast_to(new, old.shape), old)
+
+        merged = jax.tree_util.tree_map(sel, states, fresh)
+        return merged._replace(
+            key=states.key, client_id=states.client_id, queries=states.queries,
+            w_global=states.w_global,
+            quarantined=jnp.zeros_like(states.quarantined),
+        )
+
+    return reset
 
 
 # ---------------------------------------------------------------------------
@@ -580,6 +732,8 @@ class SimResult(NamedTuple):
     mean_disparity: jax.Array  # (R,)
     refactor_rate: jax.Array  # (R,) factor-cache clamped-eigh fallback rate
     repair_rate: jax.Array  # (R,) fraction of clients flagged needs_repair
+    drop_rate: jax.Array  # (R,) fraction of clients not contributing (faults)
+    quarantine_rate: jax.Array  # (R,) fraction of clients quarantined (faults)
 
 
 def simulate(
@@ -597,6 +751,8 @@ def simulate(
     checkpoint_every: int = 1,
     eval_every: int = 1,
     async_checkpoint: bool = True,
+    faults=None,  # Optional[faults.FaultConfig]
+    max_rollbacks: int = 3,
 ) -> SimResult:
     """Run R communication rounds in a single process (clients via vmap).
 
@@ -633,6 +789,7 @@ def simulate(
             rounds, chunk, diag_global_grad=diag_global_grad,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             eval_every=eval_every, async_checkpoint=async_checkpoint,
+            faults=faults, max_rollbacks=max_rollbacks,
         )
         return res
 
@@ -640,25 +797,42 @@ def simulate(
         raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
     mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
 
-    round_jit = jax.jit(
-        lambda states, sx: run_round(cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad)
-    )
+    if faults is None:
+        round_jit = jax.jit(
+            lambda states, sx: run_round(cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad)
+        )
+    else:
+        sum_fn = lambda a: jnp.sum(a, axis=0)
+        round_jit = jax.jit(
+            lambda states, sx, r: run_round(
+                cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad,
+                sum_fn=sum_fn, faults=faults, round_idx=r,
+            )
+        )
 
-    if cfg.deferred:
+    if cfg.deferred or faults is not None:
         from repro.core import rounds as rounds_mod  # deferred: avoids cycle
 
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
     queries, coss, disps, rrs, reps = [], [], [], [], []
+    drops, quars = [], []
     sx = x0
     for r in range(rounds):
-        states, stats = round_jit(states, sx)
+        if faults is None:
+            states, stats = round_jit(states, sx)
+        else:
+            states, stats = round_jit(states, sx, jnp.asarray(r, jnp.int32))
         if cfg.deferred:
             # Loop oracle for the scan engine's chunk boundary: repair after
             # every round (the chunk=1 degenerate case of the deferred
             # contract -- flags never persist across rounds here).
             states, _ = rounds_mod.repair_flagged_clients(states, cfg)
         sx = stats.server_x
+        if faults is not None and faults.tolerate:
+            # Loop oracle for the boundary quarantine reset (host-read flag,
+            # chunk=1 degenerate cadence -- see rounds.quarantine_reset_flagged)
+            states, _ = rounds_mod.quarantine_reset_flagged(states, cfg, sx)
         xs.append(sx)
         r1 = r + 1
         if r1 % eval_every == 0 or r1 == rounds:
@@ -670,6 +844,8 @@ def simulate(
         disps.append(stats.mean_disparity)
         rrs.append(stats.refactor_rate)
         reps.append(stats.repair_rate)
+        drops.append(stats.drop_rate)
+        quars.append(stats.quarantine_rate)
 
     return SimResult(
         xs=jnp.stack(xs),
@@ -679,6 +855,8 @@ def simulate(
         mean_disparity=jnp.stack(disps),
         refactor_rate=jnp.stack(rrs),
         repair_rate=jnp.stack(reps),
+        drop_rate=jnp.stack(drops),
+        quarantine_rate=jnp.stack(quars),
     )
 
 

@@ -71,32 +71,61 @@ def client_mean_fn(cfg: alg.AlgoConfig, mesh: Mesh):
     return axes, partial(_psum_mean, axes=axes, n_clients=cfg.n_clients)
 
 
+def client_sum_fn(mesh: Mesh):
+    """Un-normalized global sum over all clients of ONE array: local axis-0
+    sum -> psum over the client axes.  The aggregation primitive the
+    fault-masked engine renormalizes by its own live count (the mask count
+    rides inside the summed payload, so masking adds no extra psum)."""
+    axes = client_axes(mesh)
+
+    def one(a: jax.Array) -> jax.Array:
+        return jax.lax.psum(jnp.sum(a, axis=0), axes)
+
+    return one
+
+
 def distributed_round_fn(
     cfg: alg.AlgoConfig,
     mesh: Mesh,
     rff: Optional[rfflib.RFFParams],
     query_fn: alg.QueryFn,
+    faults=None,  # Optional[faults.FaultConfig]
 ):
     """Build a jitted one-round function with clients sharded over the mesh.
 
     Inputs (states, cobjs) are stacked over N clients; N must divide the
     product of the client mesh axes times 1-or-more clients per device.
+    With ``faults`` the returned function takes an extra traced round-index
+    argument: ``round_fn(states, cobjs, server_x, round_idx)``.
     """
     axes, mean_fn = client_mean_fn(cfg, mesh)
+    sum_fn = client_sum_fn(mesh)
 
     cspec = P(axes)  # shard the client axis over all client mesh axes
     rspec = P()  # replicated
 
-    def round_body(states, cobjs, server_x):
-        new_states, stats = alg.run_round(
-            cfg, rff, query_fn, cobjs, states, server_x, mean_fn, None
-        )
-        return new_states, stats
+    if faults is None:
+        def round_body(states, cobjs, server_x):
+            new_states, stats = alg.run_round(
+                cfg, rff, query_fn, cobjs, states, server_x, mean_fn, None
+            )
+            return new_states, stats
+
+        in_specs = (cspec, cspec, rspec)
+    else:
+        def round_body(states, cobjs, server_x, round_idx):
+            new_states, stats = alg.run_round(
+                cfg, rff, query_fn, cobjs, states, server_x, mean_fn, None,
+                sum_fn=sum_fn, faults=faults, round_idx=round_idx,
+            )
+            return new_states, stats
+
+        in_specs = (cspec, cspec, rspec, rspec)
 
     shmapped = shard_map(
         round_body,
         mesh=mesh,
-        in_specs=(cspec, cspec, rspec),
+        in_specs=in_specs,
         out_specs=(cspec, rspec),
         check_rep=False,
     )
@@ -128,6 +157,8 @@ def run_distributed(
     checkpoint_every: int = 1,
     eval_every: int = 1,
     async_checkpoint: bool = True,
+    faults=None,  # Optional[faults.FaultConfig]
+    max_rollbacks: int = 3,
 ) -> alg.SimResult:
     """Distributed analogue of algorithms.simulate (same history contract).
 
@@ -168,6 +199,7 @@ def run_distributed(
             rounds, chunk, mesh=mesh,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             eval_every=eval_every, async_checkpoint=async_checkpoint,
+            faults=faults, max_rollbacks=max_rollbacks,
         )
         return res
 
@@ -175,19 +207,27 @@ def run_distributed(
         raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
     from repro.core import rounds as rounds_mod  # deferred: avoids cycle
 
-    round_fn = distributed_round_fn(cfg, mesh, rff, query_fn)
+    round_fn = distributed_round_fn(cfg, mesh, rff, query_fn, faults=faults)
 
     xs = [x0]
     fvals = [global_value_fn(cobjs, x0)]
     queries, coss, disps, rrs, reps = [], [], [], [], []
+    drops, quars = [], []
     sx = x0
     for r in range(rounds):
-        states, stats = round_fn(states, cobjs, sx)
+        if faults is None:
+            states, stats = round_fn(states, cobjs, sx)
+        else:
+            states, stats = round_fn(states, cobjs, sx, jnp.asarray(r, jnp.int32))
         if cfg.deferred:
             # Loop-oracle boundary: per-shard masked repair after every round
             # (the chunk=1 degenerate case of the deferred contract).
             states, _ = rounds_mod.repair_flagged_clients(states, cfg, mesh=mesh)
         sx = stats.server_x
+        if faults is not None and faults.tolerate:
+            states, _ = rounds_mod.quarantine_reset_flagged(
+                states, cfg, sx, mesh=mesh
+            )
         xs.append(sx)
         r1 = r + 1
         if r1 % eval_every == 0 or r1 == rounds:
@@ -199,6 +239,8 @@ def run_distributed(
         disps.append(stats.mean_disparity)
         rrs.append(stats.refactor_rate)
         reps.append(stats.repair_rate)
+        drops.append(stats.drop_rate)
+        quars.append(stats.quarantine_rate)
 
     return alg.SimResult(
         xs=jnp.stack(xs),
@@ -208,4 +250,6 @@ def run_distributed(
         mean_disparity=jnp.stack(disps),
         refactor_rate=jnp.stack(rrs),
         repair_rate=jnp.stack(reps),
+        drop_rate=jnp.stack(drops),
+        quarantine_rate=jnp.stack(quars),
     )

@@ -38,6 +38,7 @@ path is the equivalence oracle for the tests.
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -74,6 +75,8 @@ def history_init(rounds: int, x0: jax.Array, f0: jax.Array) -> alg.SimResult:
         mean_disparity=jnp.zeros((rounds,), jnp.float32),
         refactor_rate=jnp.zeros((rounds,), jnp.float32),
         repair_rate=jnp.zeros((rounds,), jnp.float32),
+        drop_rate=jnp.zeros((rounds,), jnp.float32),
+        quarantine_rate=jnp.zeros((rounds,), jnp.float32),
     )
 
 
@@ -83,7 +86,8 @@ def history_init(rounds: int, x0: jax.Array, f0: jax.Array) -> alg.SimResult:
 
 
 def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad,
-                eval_every: int, rounds_total: Optional[int]):
+                eval_every: int, rounds_total: Optional[int],
+                sum_fn=None, faults=None):
     """One scanned round: run_round + on-device F(x_{r+1}) evaluation.
 
     The scanned xs is the in-chunk round index; the carry holds the traced
@@ -92,13 +96,25 @@ def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad,
     NaN, round ``rounds_total`` is always evaluated.  ``lax.cond`` is safe
     here -- the scan carry is unbatched, so the untaken eval is skipped for
     real (that is the whole point for LM-backbone objectives).
+
+    With ``faults`` the fault-masked ``run_round`` path runs instead: the
+    traced absolute round index ``offset + i`` keys the deterministic fault
+    draws, and ``sum_fn`` supplies the un-normalized payload aggregation the
+    mask renormalizes.  ``faults=None`` traces the seed body UNCHANGED (the
+    bitwise faults-off guarantee).
     """
 
     def body(carry, i):
         states, sx, offset = carry
-        states, stats = alg.run_round(
-            cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad
-        )
+        if faults is None:
+            states, stats = alg.run_round(
+                cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad
+            )
+        else:
+            states, stats = alg.run_round(
+                cfg, rff, query_fn, cobjs, states, sx, mean_fn, diag_global_grad,
+                sum_fn=sum_fn, faults=faults, round_idx=offset + i,
+            )
 
         def do_eval():
             return jnp.asarray(eval_fn(cobjs, stats.server_x), jnp.float32)
@@ -119,6 +135,8 @@ def _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, diag_global_grad,
             stats.mean_disparity,
             stats.refactor_rate,
             stats.repair_rate,
+            stats.drop_rate,
+            stats.quarantine_rate,
         )
         return (states, stats.server_x, offset), ys
 
@@ -134,16 +152,18 @@ def sim_chunk_fn(
     length: int,
     eval_every: int = 1,
     rounds_total: Optional[int] = None,
+    faults=None,
 ):
     """K scanned rounds with clients vmapped (single-process simulation)."""
     mean_fn = lambda tree: jax.tree_util.tree_map(
         lambda a: jnp.mean(a, axis=0), tree
     )
+    sum_fn = (lambda a: jnp.sum(a, axis=0)) if faults is not None else None
 
     def chunk(states, cobjs, sx, offset):
         body = _round_body(
             cfg, rff, query_fn, cobjs, mean_fn, global_value_fn, diag_global_grad,
-            eval_every, rounds_total,
+            eval_every, rounds_total, sum_fn=sum_fn, faults=faults,
         )
         (states, sx, _), ys = jax.lax.scan(
             body, (states, sx, offset), jnp.arange(length)
@@ -162,10 +182,14 @@ def dist_chunk_fn(
     length: int,
     eval_every: int = 1,
     rounds_total: Optional[int] = None,
+    faults=None,
 ):
     """K scanned rounds INSIDE shard_map: the per-round psum aggregation
-    (plus one scalar pmean for F) stays the only collective."""
+    (plus one scalar pmean for F) stays the only collective.  The faulted
+    body packs its live/quarantine counts INTO the psummed payload, so
+    masking adds no collective either."""
     axes, mean_fn = fed.client_mean_fn(cfg, mesh)
+    sum_fn = fed.client_sum_fn(mesh) if faults is not None else None
     cspec, rspec = P(axes), P()
 
     # Each shard sees an equal-size slice of the stacked cobjs, so the mean
@@ -177,7 +201,8 @@ def dist_chunk_fn(
 
     def local_chunk(states, cobjs, sx, offset):
         body = _round_body(cfg, rff, query_fn, cobjs, mean_fn, eval_fn, None,
-                           eval_every, rounds_total)
+                           eval_every, rounds_total, sum_fn=sum_fn,
+                           faults=faults)
         (states, sx, _), ys = jax.lax.scan(
             body, (states, sx, offset), jnp.arange(length)
         )
@@ -194,7 +219,7 @@ def dist_chunk_fn(
 
 def _hist_write(hist: alg.SimResult, ys, offset: jax.Array) -> alg.SimResult:
     """Write a chunk's stacked per-round outputs at round ``offset``."""
-    xs_k, f_k, q_k, cos_k, disp_k, rr_k, rep_k = ys
+    xs_k, f_k, q_k, cos_k, disp_k, rr_k, rep_k, dr_k, qr_k = ys
     dus = jax.lax.dynamic_update_slice
     return alg.SimResult(
         xs=dus(hist.xs, xs_k.astype(hist.xs.dtype), (offset + 1, 0)),
@@ -204,6 +229,8 @@ def _hist_write(hist: alg.SimResult, ys, offset: jax.Array) -> alg.SimResult:
         mean_disparity=dus(hist.mean_disparity, disp_k, (offset,)),
         refactor_rate=dus(hist.refactor_rate, rr_k, (offset,)),
         repair_rate=dus(hist.repair_rate, rep_k, (offset,)),
+        drop_rate=dus(hist.drop_rate, dr_k, (offset,)),
+        quarantine_rate=dus(hist.quarantine_rate, qr_k, (offset,)),
     )
 
 
@@ -340,8 +367,136 @@ def repair_flagged_clients(
 
 
 # ---------------------------------------------------------------------------
+# Quarantine reset (fault-tolerant chunk boundaries; DESIGN.md Sec. 8)
+# ---------------------------------------------------------------------------
+
+
+#: jitted per-(mesh, cfg, shape) DEVICE-decided quarantine-reset executables.
+_QUARANTINE_RESET_CACHE: dict = {}
+
+
+def _quarantine_reset_exec(cfg: alg.AlgoConfig, mesh: Optional[Mesh], shape):
+    key = (mesh, repr(cfg), shape)
+    if key not in _QUARANTINE_RESET_CACHE:
+        reset = alg.make_quarantine_reset(cfg)
+
+        def gated(sts, sx):
+            n = jnp.sum(sts.quarantined.astype(jnp.int32))
+            return jax.lax.cond(n > 0, lambda: reset(sts, sx), lambda: sts)
+
+        if mesh is None:
+            fn = jax.jit(gated, donate_argnums=0)
+        else:
+            axes = fed.client_axes(mesh)
+            cspec = P(axes)
+            fn = jax.jit(
+                shard_map(
+                    gated,
+                    mesh=mesh,
+                    in_specs=(cspec, P()),
+                    out_specs=cspec,
+                    check_rep=False,
+                ),
+                donate_argnums=0,
+            )
+        _QUARANTINE_RESET_CACHE[key] = fn
+    return _QUARANTINE_RESET_CACHE[key]
+
+
+def boundary_quarantine_reset(
+    states: alg.ClientState,
+    cfg: alg.AlgoConfig,
+    server_x: jax.Array,
+    mesh: Optional[Mesh] = None,
+) -> alg.ClientState:
+    """Zero-host-sync chunk boundary: re-admit quarantined clients ON DEVICE.
+
+    The fault-tolerant sibling of ``boundary_repair_on_device``: one extra
+    (async) dispatch per chunk that ``lax.cond``s on the device-side
+    quarantine count and, when any client is quarantined, rebuilds those
+    clients from the current global iterate (``alg.make_quarantine_reset``;
+    the reset template is computed eagerly at build time so no init-time
+    linear algebra enters the compiled gate).  The common all-clear case
+    costs an O(N) reduction; no flag vector is read to host, no collectives
+    are issued (each shard conds on its LOCAL count), and the stacked state
+    is donated so the boundary runs in place.
+    """
+    fn = _quarantine_reset_exec(cfg, mesh, states.x.shape)
+    return fn(states, jnp.asarray(server_x))
+
+
+def quarantine_reset_flagged(
+    states: alg.ClientState,
+    cfg: alg.AlgoConfig,
+    server_x: jax.Array,
+    mesh: Optional[Mesh] = None,
+) -> tuple[alg.ClientState, int]:
+    """Host-read quarantine reset: the ``chunk=0`` loop-driver ORACLE.
+
+    Reads the (N,)-bool quarantine flags to host and returns unchanged
+    states when nothing is flagged, exactly like ``repair_flagged_clients``;
+    when clients ARE quarantined it runs the same gated executable as
+    ``boundary_quarantine_reset``, so the reset semantics live in one place
+    and the oracle/steady-state equivalence is tested.  Returns
+    (states, number of clients re-admitted).
+    """
+    flags = np.asarray(jax.device_get(states.quarantined))
+    n_flagged = int(flags.sum())
+    if n_flagged == 0:
+        return states, 0
+    return boundary_quarantine_reset(states, cfg, server_x, mesh=mesh), n_flagged
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
+
+
+def _restore_newest_good(
+    checkpoint_dir: str,
+    run_meta: dict,
+    rounds: int,
+    x0: jax.Array,
+    states_like: alg.ClientState,
+    mesh: Optional[Mesh],
+):
+    """Restore from the newest COMPLETE, uncorrupted checkpoint step.
+
+    Steps whose meta is unreadable or whose arrays fail the integrity checks
+    (truncated zip, checksum mismatch -- ``ckpt_io.CorruptCheckpointError``)
+    are skipped with a warning and the next-older step is tried, so a torn
+    or bit-flipped newest step degrades to losing one checkpoint interval
+    instead of the whole run.  A step from a DIFFERENT run identity still
+    raises: silently splicing two experiments is worse than failing.
+
+    Returns ``(states, hist, start)``; ``hist is None`` means nothing
+    restorable exists under ``checkpoint_dir``.
+    """
+    for step in sorted(ckpt_io.list_steps(checkpoint_dir), reverse=True):
+        try:
+            saved = (ckpt_io.load_meta(checkpoint_dir, step).get("extra") or {})
+        except (OSError, ValueError) as e:
+            print(f"[repro.rounds] checkpoint step {step}: unreadable meta "
+                  f"({e}); trying an older step")
+            continue
+        for field in ("rounds", "cfg", "eval_every", "faults"):
+            if saved.get(field) not in (None, run_meta[field]):
+                raise ValueError(
+                    f"checkpoint_dir {checkpoint_dir!r} holds a run with "
+                    f"{field}={saved[field]!r}, cannot resume it with "
+                    f"{field}={run_meta[field]!r}; point at a fresh directory"
+                )
+        hist_like = history_init(rounds, x0, jnp.zeros((), jnp.float32))
+        try:
+            states, hist, start = ckpt_io.restore_round_state(
+                checkpoint_dir, states_like, hist_like, step=step, mesh=mesh
+            )
+        except (ckpt_io.CorruptCheckpointError, OSError) as e:
+            print(f"[repro.rounds] checkpoint step {step}: corrupt "
+                  f"({e}); trying an older step")
+            continue
+        return states, hist, min(start, rounds)
+    return states_like, None, 0
 
 
 def run_rounds(
@@ -362,6 +517,8 @@ def run_rounds(
     resume: bool = True,
     eval_every: int = 1,
     async_checkpoint: bool = True,
+    faults=None,  # Optional[faults.FaultConfig]
+    max_rollbacks: int = 3,
 ) -> tuple[alg.ClientState, alg.SimResult]:
     """Run ``rounds`` communication rounds in chunks of ``chunk`` scanned
     iterations.  Returns (final stacked ClientState, SimResult history).
@@ -385,6 +542,18 @@ def run_rounds(
     chunk's compute (``async_checkpoint=False`` forces the legacy blocking
     write).  Between boundaries the Python loop therefore runs ahead of the
     device, queueing chunk k+1 while chunk k executes.
+
+    ``faults`` (a ``repro.faults.FaultConfig``) turns on the fault-tolerant
+    engine (DESIGN.md Sec. 8): the scanned body masks dropped/poisoned
+    clients out of the aggregation on device, quarantined clients are
+    re-admitted from the global iterate at chunk boundaries by a
+    device-decided gate, and the boundary gains ONE documented host sync --
+    a finiteness check of the (d,)-vector server iterate -- that triggers
+    chunk ROLLBACK: restore the newest good checkpoint (corrupt steps fall
+    back to older ones) and re-run the lost rounds with tolerance forced
+    on, at most ``max_rollbacks`` times.  A failed checkpoint write rolls
+    back the same way.  ``faults=None`` leaves every code path above
+    byte-identical to the faults-free engine.
     """
     if rounds < 0:
         raise ValueError(f"rounds must be >= 0, got {rounds}")
@@ -411,26 +580,17 @@ def run_rounds(
     # (The initial iterate and RNG key live in the restored state itself and
     # so cannot drift; x0 passed here is ignored on resume.)
     run_meta = {"rounds": rounds, "chunk": chunk, "cfg": repr(cfg),
-                "eval_every": eval_every}
+                "eval_every": eval_every, "faults": repr(faults)}
     start, hist = 0, None
-    if checkpoint_dir and resume:
-        latest = ckpt_io.latest_step(checkpoint_dir)
-        if latest is not None:
-            saved = (ckpt_io.load_meta(checkpoint_dir, latest).get("extra") or {})
-            for field in ("rounds", "cfg", "eval_every"):
-                if saved.get(field) not in (None, run_meta[field]):
-                    raise ValueError(
-                        f"checkpoint_dir {checkpoint_dir!r} holds a run with "
-                        f"{field}={saved[field]!r}, cannot resume it with "
-                        f"{field}={run_meta[field]!r}; point at a fresh directory"
-                    )
-            # Resume path: the checkpointed history already holds f(x_0),
-            # so the (possibly expensive) initial eval is skipped.
-            hist_like = history_init(rounds, x0, jnp.zeros((), jnp.float32))
-            states, hist, start = ckpt_io.restore_round_state(
-                checkpoint_dir, states, hist_like, step=latest, mesh=mesh
-            )
-            start = min(start, rounds)
+    if checkpoint_dir and resume and ckpt_io.latest_step(checkpoint_dir) is not None:
+        # Resume path: the checkpointed history already holds f(x_0), so the
+        # (possibly expensive) initial eval is skipped.  Corrupt newest steps
+        # fall back to older ones (the restore half of the fault model).
+        r_states, r_hist, start = _restore_newest_good(
+            checkpoint_dir, run_meta, rounds, x0, states, mesh
+        )
+        if r_hist is not None:
+            states, hist = r_states, r_hist
             if mesh is not None:
                 # No-op re-placement for shard-restored state; places legacy
                 # single-file restores (host arrays) onto the mesh.
@@ -439,18 +599,23 @@ def run_rounds(
         hist = history_init(rounds, x0, global_value_fn(cobjs, x0))
 
     sx = hist.xs[start]
-    steps: dict[int, Any] = {}
+    fcfg = faults
+    steps: dict[tuple, Any] = {}
 
     def step_for(k: int):
-        if k not in steps:
+        # Keyed on (length, fault config): a rollback flips ``tolerate`` and
+        # must get a fresh executable, not the non-tolerant one.
+        skey = (k, fcfg)
+        if skey not in steps:
             if mesh is None:
                 cf = sim_chunk_fn(cfg, rff, query_fn, global_value_fn,
-                                  diag_global_grad, k, eval_every, rounds)
+                                  diag_global_grad, k, eval_every, rounds,
+                                  faults=fcfg)
             else:
                 cf = dist_chunk_fn(cfg, mesh, rff, query_fn, global_value_fn,
-                                   k, eval_every, rounds)
-            steps[k] = make_chunk_step(cf)
-        return steps[k]
+                                   k, eval_every, rounds, faults=fcfg)
+            steps[skey] = make_chunk_step(cf)
+        return steps[skey]
 
     # Multi-process pods force the blocking write: the sharded layout's
     # cross-process barrier (io._sync) is a collective, and issuing it from
@@ -472,7 +637,13 @@ def run_rounds(
         if (checkpoint_dir and async_checkpoint and jax.process_count() == 1)
         else None
     )
-    done, chunks_done = start, 0
+    if fcfg is not None and checkpoint_dir and ckpt_io.latest_step(checkpoint_dir) is None:
+        # Rollback insurance: guarantee a restore target exists BEFORE the
+        # first faulted chunk runs (one blocking write per fresh directory).
+        payload = ckpt_io.prepare_round_state(states, hist, mesh=mesh)
+        ckpt_io.write_round_state(checkpoint_dir, start, payload,
+                                  extra_meta=run_meta)
+    done, chunks_done, rollbacks = start, 0, 0
     try:
         while done < rounds:
             k = min(chunk, rounds - done)
@@ -485,21 +656,80 @@ def run_rounds(
             # DEVICE: no flag read, no host sync -- the loop keeps running
             # ahead of the device (DESIGN.md Sec. 3).
             states = boundary_repair_on_device(states, cfg, mesh=mesh)
-            if checkpoint_dir and (
+            if fcfg is not None and fcfg.tolerate:
+                # Re-admit quarantined clients from the global iterate;
+                # decided on device like the repair gate above.
+                states = boundary_quarantine_reset(states, cfg, sx, mesh=mesh)
+            ok = True
+            if fcfg is not None:
+                # THE one documented host sync of the faulted boundary: a
+                # finiteness check of the (d,) server iterate, gating the
+                # checkpoint write so a poisoned state is never persisted.
+                ok = bool(np.isfinite(np.asarray(jax.device_get(sx))).all())
+            wrote_ok = True
+            if ok and checkpoint_dir and (
                 chunks_done % max(checkpoint_every, 1) == 0 or done == rounds
             ):
                 # Snapshot to host BEFORE the next chunk donates these
                 # buffers; the file write itself overlaps the next chunk's
                 # compute on the writer thread.
                 payload = ckpt_io.prepare_round_state(states, hist, mesh=mesh)
+                try:
+                    if writer is not None:
+                        # A submit surfaces the PREVIOUS boundary's write
+                        # error; rolling back to the last good step handles
+                        # both boundaries identically.
+                        writer.submit(partial(
+                            ckpt_io.write_round_state, checkpoint_dir, done,
+                            payload, run_meta,
+                        ))
+                    else:
+                        ckpt_io.write_round_state(checkpoint_dir, done, payload,
+                                                  extra_meta=run_meta)
+                except OSError as e:
+                    if fcfg is None:
+                        raise
+                    print(f"[repro.rounds] checkpoint write failed at round "
+                          f"{done}: {e}")
+                    wrote_ok = False
+            if fcfg is not None and (not ok or not wrote_ok):
+                reason = ("non-finite server iterate" if not ok
+                          else "checkpoint write failure")
+                if not checkpoint_dir:
+                    raise FloatingPointError(
+                        f"{reason} at round {done} with no checkpoint_dir to "
+                        "roll back to (chunk rollback needs checkpointing)"
+                    )
+                if rollbacks >= max_rollbacks:
+                    raise FloatingPointError(
+                        f"{reason} at round {done}: rollback budget "
+                        f"max_rollbacks={max_rollbacks} exhausted"
+                    )
+                rollbacks += 1
                 if writer is not None:
-                    writer.submit(partial(
-                        ckpt_io.write_round_state, checkpoint_dir, done,
-                        payload, run_meta,
-                    ))
-                else:
-                    ckpt_io.write_round_state(checkpoint_dir, done, payload,
-                                              extra_meta=run_meta)
+                    try:
+                        writer.wait()
+                    except OSError:
+                        pass  # the failed write IS the fault being rolled back
+                print(f"[repro.rounds] ROLLBACK {rollbacks}/{max_rollbacks} at "
+                      f"round {done} ({reason}): restoring last good checkpoint")
+                r_states, r_hist, r_start = _restore_newest_good(
+                    checkpoint_dir, run_meta, rounds, x0, states, mesh
+                )
+                if r_hist is None:
+                    raise FloatingPointError(
+                        f"rollback at round {done} failed: no restorable "
+                        f"checkpoint under {checkpoint_dir!r}"
+                    )
+                states, hist, done = r_states, r_hist, r_start
+                if mesh is not None:
+                    states = fed.shard_clients(mesh, states)
+                sx = hist.xs[done]
+                if not fcfg.tolerate:
+                    print("[repro.rounds] re-running with fault tolerance "
+                          "FORCED ON")
+                    fcfg = dataclasses.replace(fcfg, tolerate=True)
+                chunks_done = 0
     finally:
         if writer is not None:
             writer.wait()

@@ -1,0 +1,13 @@
+"""Deterministic fault injection for the federated round engine.
+
+``injector``: the PRNG-scheduled per-(round, client) fault draws and the
+``FaultConfig`` knob surface consumed by ``core.algorithms.run_round`` /
+``core.rounds.run_rounds``.  ``corrupt``: host-side checkpoint corruption
+utilities (torn writes, bit flips) -- the storage-fault half of the fault
+model, used by tests and the faults benchmark.
+"""
+
+from repro.faults.injector import FaultConfig, FaultDraw, draw_faults, schedule_table
+from repro.faults import corrupt
+
+__all__ = ["FaultConfig", "FaultDraw", "draw_faults", "schedule_table", "corrupt"]

@@ -1,0 +1,82 @@
+"""Host-side checkpoint corruption: the storage half of the fault model.
+
+Round-state checkpoints are written atomically (tmp + rename), so the torn
+writes that survive to a COMPLETE step directory are the storage-layer
+kind: a truncated ``arrays.npz`` (filesystem lost the tail) or flipped
+bytes inside it (medium corruption).  These helpers produce exactly those
+states on a real checkpoint directory so tests and the faults benchmark can
+drive the restore fallback + chunk-rollback machinery end to end
+(checkpoint/io.py detects both via the per-leaf manifest checksums and the
+zip-member CRCs and raises ``CorruptCheckpointError``).
+"""
+
+from __future__ import annotations
+
+import os
+import random
+
+
+def _step_dir(root: str, step: int) -> str:
+    path = os.path.join(root, f"step_{step:08d}")
+    if not os.path.isdir(path):
+        raise FileNotFoundError(f"no checkpoint step {step} under {root!r}")
+    return path
+
+
+def _npz_paths(root: str, step: int, shard: int | None) -> list[str]:
+    """The arrays.npz file(s) of one step: the single-layout file, or the
+    given shard's (``shard=None`` = every shard)."""
+    path = _step_dir(root, step)
+    single = os.path.join(path, "arrays.npz")
+    if os.path.isfile(single):
+        return [single]
+    shards = sorted(
+        d for d in os.listdir(path)
+        if d.startswith("shard_") and os.path.isdir(os.path.join(path, d))
+    )
+    if shard is not None:
+        shards = [s for s in shards if s == f"shard_{shard:05d}"]
+    out = [os.path.join(path, s, "arrays.npz") for s in shards]
+    if not out:
+        raise FileNotFoundError(f"no arrays.npz under {path!r} (shard={shard})")
+    return out
+
+
+def truncate_npz(root: str, step: int, shard: int | None = None,
+                 keep_fraction: float = 0.5) -> list[str]:
+    """Tear a checkpoint's array file(s): keep only the leading fraction.
+
+    Truncation destroys the zip central directory at the END of the file,
+    which is how a real torn write presents; restore must reject the step
+    instead of loading garbage.  Returns the paths corrupted."""
+    if not 0.0 <= keep_fraction < 1.0:
+        raise ValueError(f"keep_fraction={keep_fraction} outside [0, 1)")
+    paths = _npz_paths(root, step, shard)
+    for p in paths:
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(max(int(size * keep_fraction), 1))
+    return paths
+
+
+def flip_bytes(root: str, step: int, shard: int | None = None,
+               n_bytes: int = 8, seed: int = 0) -> list[str]:
+    """Flip ``n_bytes`` random payload bytes in a checkpoint's array file(s).
+
+    The file length and zip directory stay intact, so only content checks
+    (the manifest's per-leaf checksums / the member CRCs) can catch it.
+    Returns the paths corrupted."""
+    paths = _npz_paths(root, step, shard)
+    rng = random.Random(seed)
+    for p in paths:
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            for _ in range(n_bytes):
+                # skip the first 1KB: headers there fail fast anyway and the
+                # point is to corrupt CONTENT that parses
+                off = rng.randrange(min(1024, size - 1), size)
+                f.seek(off)
+                b = f.read(1)
+                f.seek(off)
+                f.write(bytes([b[0] ^ 0xFF]))
+    return paths

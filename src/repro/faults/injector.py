@@ -1,0 +1,142 @@
+"""Deterministic PRNG-scheduled fault draws (DESIGN.md Sec. 8).
+
+The schedule is a pure function of ``(FaultConfig.seed, round, client_id)``
+through ``jax.random.fold_in`` chains, so
+
+  * the same config reproduces the same fault pattern on every run, every
+    topology (vmap simulation and shard_map distribution draw bitwise the
+    same masks -- client identity comes from the ``ClientState.client_id``
+    leaf, not from device placement), and
+  * the draws trace into the scanned round body as ordinary device code:
+    no host RNG, no callbacks, nothing the zero-sync contract can see.
+
+Fault kinds (each an independent Bernoulli per round x client, with
+dropout taking precedence -- a dropped client cannot also straggle or send
+a payload):
+
+  * ``drop``      client misses the round entirely (no update, no queries);
+  * ``straggle``  client's update arrives too late: the server sees its
+                  STALE iterate (the round's broadcast x) and the client's
+                  local state does not advance;
+  * ``nan`` / ``inf``  the client's update payload is poisoned with
+                  non-finite values (diverged client, corrupted uplink).
+
+Rates set to ``0.0`` are STATIC no-ops: no bernoulli op enters the traced
+program for that kind, so an all-zero config measures the pure masking
+overhead and a ``faults=None`` run contains no fault code at all (the
+bitwise faults-off guarantee).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+#: fold_in tags per fault kind -- disjoint streams off the per-(round,
+#: client) base key, so enabling one kind never perturbs another's draws.
+_KIND_DROP = 0
+_KIND_STRAGGLE = 1
+_KIND_NAN = 2
+_KIND_INF = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static (hashable) fault schedule: safe as a jit closure / cache key.
+
+    ``first_round``/``last_round`` window the injection on the absolute
+    round index (``last_round=None`` = until the end; the window is
+    half-open ``[first_round, last_round)``).  ``tolerate=True`` enables
+    the engine's masking + quarantine response; ``tolerate=False`` injects
+    WITHOUT masking, so one poisoned client visibly poisons the dense psum
+    mean -- the failure mode the tolerant engine exists to remove, and the
+    trigger for the chunk-rollback path in ``run_rounds``.
+    """
+
+    seed: int = 0
+    drop_rate: float = 0.0
+    straggle_rate: float = 0.0
+    nan_rate: float = 0.0
+    inf_rate: float = 0.0
+    first_round: int = 0
+    last_round: Optional[int] = None
+    tolerate: bool = True
+
+    def __post_init__(self):
+        for field in ("drop_rate", "straggle_rate", "nan_rate", "inf_rate"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field}={v} outside [0, 1]")
+
+    @property
+    def injects(self) -> bool:
+        """True when any fault kind has a nonzero rate."""
+        return (self.drop_rate > 0 or self.straggle_rate > 0
+                or self.nan_rate > 0 or self.inf_rate > 0)
+
+
+class FaultDraw(NamedTuple):
+    """Per-client fault indicators for one round (bool, shape (N,))."""
+
+    drop: jax.Array
+    straggle: jax.Array
+    nan: jax.Array
+    inf: jax.Array
+
+
+def _client_draw(fcfg: FaultConfig, round_idx: jax.Array, client_id: jax.Array) -> FaultDraw:
+    base = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(fcfg.seed), round_idx), client_id
+    )
+
+    def bern(kind: int, rate: float) -> jax.Array:
+        if rate <= 0.0:
+            return jnp.zeros((), bool)  # static: no RNG op traced
+        return jax.random.bernoulli(jax.random.fold_in(base, kind), rate)
+
+    drop = bern(_KIND_DROP, fcfg.drop_rate)
+    # precedence: a dropped client sends nothing, so it cannot also
+    # straggle or poison; nan wins over inf when both fire
+    straggle = bern(_KIND_STRAGGLE, fcfg.straggle_rate) & ~drop
+    nan = bern(_KIND_NAN, fcfg.nan_rate) & ~drop
+    inf = bern(_KIND_INF, fcfg.inf_rate) & ~drop & ~nan
+    return FaultDraw(drop=drop, straggle=straggle, nan=nan, inf=inf)
+
+
+def draw_faults(fcfg: FaultConfig, round_idx: jax.Array, client_ids: jax.Array) -> FaultDraw:
+    """Fault indicators for one round over a batch of clients.
+
+    ``round_idx`` is the ABSOLUTE 0-based round (traced int32 inside the
+    scanned body); ``client_ids`` is the (N,) int32 global-identity leaf of
+    the stacked ``ClientState``.  Deterministic in (seed, round, client) and
+    independent of batch order or sharding.
+    """
+    round_idx = jnp.asarray(round_idx, jnp.int32)
+    draws = jax.vmap(lambda cid: _client_draw(fcfg, round_idx, cid))(client_ids)
+    if fcfg.first_round <= 0 and fcfg.last_round is None:
+        return draws  # trivial window: no gate ops traced
+    active = round_idx >= fcfg.first_round
+    if fcfg.last_round is not None:
+        active = active & (round_idx < fcfg.last_round)
+    return FaultDraw(*(m & active for m in draws))
+
+
+def schedule_table(fcfg: FaultConfig, rounds: int, n_clients: int):
+    """Host-side (rounds, N) view of the schedule per kind, for inspection.
+
+    Returns a dict of numpy bool arrays keyed by fault kind.  Computed with
+    the same jax draws the engine traces, so the table IS what the engine
+    will inject (tested)."""
+    import numpy as np
+
+    ids = jnp.arange(n_clients, dtype=jnp.int32)
+    per_round = jax.jit(lambda r: draw_faults(fcfg, r, ids))
+    out = {k: np.zeros((rounds, n_clients), bool) for k in FaultDraw._fields}
+    for r in range(rounds):
+        d = jax.device_get(per_round(jnp.int32(r)))
+        for k in FaultDraw._fields:
+            out[k][r] = np.asarray(getattr(d, k))
+    return out

@@ -80,6 +80,55 @@ def add_engine_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate global F only every k-th round (+ final); "
                          "skipped history rows hold NaN")
+    add_fault_flags(ap)
+
+
+def add_fault_flags(ap: argparse.ArgumentParser) -> None:
+    """Deterministic fault-injection knobs (repro.faults.FaultConfig)."""
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="PRNG seed of the deterministic fault schedule")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-(round, client) dropout probability")
+    ap.add_argument("--straggle-rate", type=float, default=0.0,
+                    help="per-(round, client) straggler (stale update) prob.")
+    ap.add_argument("--nan-rate", type=float, default=0.0,
+                    help="per-(round, client) NaN-payload probability")
+    ap.add_argument("--inf-rate", type=float, default=0.0,
+                    help="per-(round, client) Inf-payload probability")
+    ap.add_argument("--fault-from", type=int, default=0,
+                    help="first absolute round faults are active (default 0)")
+    ap.add_argument("--fault-until", type=int, default=None,
+                    help="faults stop at this round (half-open; default: never)")
+    ap.add_argument("--no-fault-tolerance", action="store_true",
+                    help="inject WITHOUT the masking/quarantine response "
+                         "(demonstrates the poisoning failure mode; the "
+                         "engine recovers via chunk rollback)")
+    ap.add_argument("--fault-tolerance", action="store_true",
+                    help="enable the fault-tolerant engine even with all "
+                         "fault rates 0 (measures pure masking overhead)")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="chunk-rollback budget before the run fails loudly")
+
+
+def faults_from_args(args: argparse.Namespace):
+    """FaultConfig from flags installed by ``add_fault_flags``; ``None``
+    (the bitwise faults-off engine) unless a rate is nonzero or
+    ``--fault-tolerance`` explicitly opts in."""
+    from repro.faults import FaultConfig
+
+    fcfg = FaultConfig(
+        seed=args.fault_seed,
+        drop_rate=args.drop_rate,
+        straggle_rate=args.straggle_rate,
+        nan_rate=args.nan_rate,
+        inf_rate=args.inf_rate,
+        first_round=args.fault_from,
+        last_round=args.fault_until,
+        tolerate=not args.no_fault_tolerance,
+    )
+    if not fcfg.injects and not args.fault_tolerance:
+        return None
+    return fcfg
 
 
 def config_from_args(args: argparse.Namespace, *, dim: int,

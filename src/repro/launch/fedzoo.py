@@ -86,6 +86,9 @@ def main() -> None:
     cfg = common.config_from_args(args, dim=dim, n_clients=args.clients)
     print(f"queries/round/client = {cfg.queries_per_round()}  "
           f"uplink floats/round/client = {cfg.comm_floats_per_round()}")
+    faults = common.faults_from_args(args)
+    if faults is not None:
+        print(f"faults: {faults}")
 
     t0 = time.time()
     ckpt = args.ckpt_dir or None
@@ -95,13 +98,15 @@ def main() -> None:
                               args.rounds, chunk=args.chunk, checkpoint_dir=ckpt,
                               checkpoint_every=args.ckpt_every,
                               eval_every=args.eval_every,
-                              async_checkpoint=not args.sync_ckpt)
+                              async_checkpoint=not args.sync_ckpt,
+                              faults=faults, max_rollbacks=args.max_rollbacks)
     else:
         res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds,
                            chunk=args.chunk, checkpoint_dir=ckpt,
                            checkpoint_every=args.ckpt_every,
                            eval_every=args.eval_every,
-                           async_checkpoint=not args.sync_ckpt)
+                           async_checkpoint=not args.sync_ckpt,
+                           faults=faults, max_rollbacks=args.max_rollbacks)
     dt = time.time() - t0
 
     if jax.process_index() != 0:
@@ -112,6 +117,9 @@ def main() -> None:
     print(f"F(x_0) = {float(f[0]):+.5f}   F(x_R) = {float(f[-1]):+.5f}   "
           f"best = {best:+.5f}   ({dt:.1f}s, "
           f"{args.rounds / max(dt, 1e-9):.1f} rounds/s)")
+    if faults is not None:
+        print(f"mean drop_rate = {float(jnp.mean(res.drop_rate)):.3f}   "
+              f"mean quarantine_rate = {float(jnp.mean(res.quarantine_rate)):.3f}")
     stride = max(args.rounds // 10, 1)
     shown = sorted(set(range(0, args.rounds + 1, stride)) | {args.rounds})
     for r in shown:
