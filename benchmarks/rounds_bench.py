@@ -203,6 +203,123 @@ def _bench_engine(n_clients: int, rounds: int, defer: bool) -> dict:
     }
 
 
+#: partial-participation benchmark shape (client pool, core/pool.py): the
+#: pool holds N=256 clients on the host; only the K=64 cohort ever touches
+#: the device.  The dense comparison runs the SAME K=64 clients through the
+#: plain scan engine, so the pooled-vs-dense delta isolates what partial
+#: participation adds: the host gather/scatter at each chunk boundary plus
+#: the zero-rate masked aggregation the pooled body always carries.
+POOL_N, POOL_K = 256, 64
+
+
+def _bench_pool(pool_size: int, cohort: int, rounds: int) -> dict:
+    """Steady-state ms/round of the pooled engine (N on host, K on device)
+    vs the dense engine at n_clients=K -- same mesh footprint, ONE cohort
+    executable reused across every sampled cohort (pool.run_pooled_rounds
+    keys its step cache on K, not on the member ids)."""
+    import dataclasses
+
+    from repro.core import pool as pool_mod
+    from repro.faults import FaultConfig
+
+    key = jax.random.PRNGKey(0)
+    cobjs = obj.make_quadratic(key, pool_size, DIM, 5.0, 0.001)
+    cfg = launch_common.make_config("fedzo", dim=DIM, n_clients=pool_size,
+                                    lengthscale=0.5, noise=1e-5,
+                                    **_ALGOS["fedzo"])
+    ccfg = dataclasses.replace(cfg, n_clients=cohort)
+    x0 = jnp.full((DIM,), 0.5, jnp.float32)
+    query, gval = obj.quadratic_query, obj.quadratic_global_value
+    cobjs_host = jax.device_get(cobjs)
+
+    # -- dense engine at K clients: the mesh-footprint-matched baseline
+    dense_cobjs = jax.tree_util.tree_map(lambda a: jnp.asarray(a[:cohort]),
+                                         cobjs_host)
+    dense_step = rounds_mod.make_chunk_step(
+        rounds_mod.sim_chunk_fn(ccfg, None, query, gval, None, CHUNK)
+    )
+
+    def fresh_dense():
+        states = alg.init_states(ccfg, jax.random.PRNGKey(2), x0)
+        hist = rounds_mod.history_init(rounds, x0, gval(dense_cobjs, x0))
+        return states, hist
+
+    s_w, h_w = fresh_dense()
+    jax.block_until_ready(dense_step(s_w, h_w, dense_cobjs, x0, jnp.int32(0))[2])
+
+    def time_dense() -> float:
+        states, hist = fresh_dense()
+        jax.block_until_ready((states.x, hist.xs))
+        sx = x0
+        t0 = time.time()
+        for off in range(0, rounds, CHUNK):
+            states, hist, sx = dense_step(states, hist, dense_cobjs, sx,
+                                          jnp.int32(off))
+        jax.block_until_ready(hist.xs)
+        return time.time() - t0
+
+    # -- pooled engine: the run_pooled_rounds steady-state inner loop (the
+    # zero-rate masked body it always compiles), minus checkpoint I/O
+    pooled_step = rounds_mod.make_chunk_step(
+        rounds_mod.sim_chunk_fn(ccfg, None, query, gval, None, CHUNK,
+                                faults=FaultConfig())
+    )
+
+    def fresh_pool():
+        pool = pool_mod.init_pool(cfg, jax.random.PRNGKey(2), x0)
+        hist = rounds_mod.history_init(rounds, x0, gval(cobjs, x0))
+        return pool, hist
+
+    pool_w, h_w = fresh_pool()
+    idx_w = pool_mod.sample_cohort(0, 0, pool_size, cohort)
+    cs_w = pool_w.gather(idx_w)
+    co_w = jax.tree_util.tree_map(lambda a: jnp.asarray(a[idx_w]), cobjs_host)
+    jax.block_until_ready(pooled_step(cs_w, h_w, co_w, x0, jnp.int32(0))[2])
+
+    def time_pooled() -> float:
+        pool, hist = fresh_pool()
+        jax.block_until_ready(hist.xs)
+        sx = x0
+        t0 = time.time()
+        for off in range(0, rounds, CHUNK):
+            idx = pool_mod.sample_cohort(0, off, pool_size, cohort)
+            cstates = pool.gather(idx)
+            cco = jax.tree_util.tree_map(lambda a: jnp.asarray(a[idx]),
+                                         cobjs_host)
+            cstates, hist, sx = pooled_step(cstates, hist, cco, sx,
+                                            jnp.int32(off))
+            pool.scatter(idx, cstates)
+        jax.block_until_ready(hist.xs)
+        return time.time() - t0
+
+    # -- isolated gather/scatter boundary cost (host indexing + transfers)
+    def time_gather_scatter() -> float:
+        pool, _ = fresh_pool()
+        best = float("inf")
+        for off in range(8):
+            t0 = time.time()
+            idx = pool_mod.sample_cohort(0, off, pool_size, cohort)
+            cstates = pool.gather(idx)
+            jax.block_until_ready(cstates.x)
+            pool.scatter(idx, cstates)
+            best = min(best, time.time() - t0)
+        return best
+
+    dense_pr = min(time_dense() for _ in range(REPEATS)) / rounds
+    pooled_pr = min(time_pooled() for _ in range(REPEATS)) / rounds
+    return {
+        "pool_size": pool_size,
+        "cohort": cohort,
+        "dense_ms_per_round": dense_pr * 1e3,
+        "pooled_ms_per_round": pooled_pr * 1e3,
+        "dense_rounds_per_sec": 1.0 / dense_pr,
+        "pooled_rounds_per_sec": 1.0 / pooled_pr,
+        "pool_overhead_ratio": pooled_pr / dense_pr,
+        "gather_scatter_msec": time_gather_scatter() * 1e3,
+        "rounds_measured": rounds,
+    }
+
+
 #: boundary-overhead benchmark config (ISSUE 5 tentpole): moderate per-round
 #: compute so the BOUNDARY work (repair decision + checkpoint write) is
 #: visible against the chunk, at N=64 clients like the engine comparison.
@@ -375,6 +492,19 @@ def run(quick: bool) -> list[Row]:
                          + (f";speedup={speedup:.2f}x;repair_rate={m['repair_rate']:.3f}"
                             if tag == "deferred" else "")),
             ))
+
+    # -- partial participation: pooled N=256/K=64 vs dense K=64
+    p = _bench_pool(POOL_N, POOL_K, rounds)
+    _JSON_PAYLOAD[f"pool_n{POOL_N}_k{POOL_K}"] = p
+    for tag in ("dense", "pooled"):
+        rows.append(Row(
+            name=f"pool_{tag}_n{POOL_N}_k{POOL_K}",
+            us_per_call=p[f"{tag}_ms_per_round"] * 1e3,
+            derived=(f"rounds_per_sec={p[f'{tag}_rounds_per_sec']:.1f}"
+                     + (f";overhead={p['pool_overhead_ratio']:.2f}x;"
+                        f"gather_scatter_msec={p['gather_scatter_msec']:.2f}"
+                        if tag == "pooled" else "")),
+        ))
 
     # -- chunk-boundary overhead: PR 3 host-sync boundary vs zero-sync
     b = _bench_boundary(64, 8 if quick else 16)

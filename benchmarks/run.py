@@ -56,7 +56,8 @@ _HIGHER_BETTER = ("per_sec", "speedup")
 #: summary that --compare prints per BENCH file, so silently-untracked
 #: metrics are visible instead of vanishing from the regression gate.
 _INFORMATIONAL = ("repair_rate", "refactor_rate", "drop_rate",
-                  "quarantine_rate", "mask_overhead_ratio", "_usec", "_msec")
+                  "quarantine_rate", "mask_overhead_ratio",
+                  "pool_overhead_ratio", "_usec", "_msec")
 
 
 def _metric_direction(key: str) -> str | None:

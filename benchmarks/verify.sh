@@ -6,6 +6,9 @@
 #                                        # analyzer + ruff (no execution)
 #   bash benchmarks/verify.sh --faults   # fault-tolerance gate: the fault
 #                                        # test suite + BENCH_faults compare
+#   bash benchmarks/verify.sh --pool     # partial-participation gate: the
+#                                        # pool equivalence suite + the
+#                                        # BENCH_rounds pool-section compare
 #   BENCH_TOL=0.5 bash benchmarks/verify.sh
 #   BENCH_ONLY=rounds,kernels bash benchmarks/verify.sh
 #
@@ -56,6 +59,22 @@ if [[ "${1:-}" == "--faults" ]]; then
     python -m benchmarks.run --only faults --compare --compare-tol "${BENCH_TOL}"
 
     echo "verify --faults: OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--pool" ]]; then
+    # Partial-participation gate (ISSUE 9): the client-pool suite end to
+    # end -- deterministic cohort sampling, K=N bitwise identity against
+    # the dense engine (sim + distributed), pooled checkpoint resume, one
+    # cohort executable across rounds -- then the pooled-vs-dense round
+    # timing compare against the committed BENCH_rounds.json pool section.
+    echo "== partial-participation gate: test suite =="
+    python -m pytest -x -q tests/test_pool.py
+
+    echo "== partial-participation gate: pooled-round regression =="
+    python -m benchmarks.run --only rounds --compare --compare-tol "${BENCH_TOL}"
+
+    echo "verify --pool: OK"
     exit 0
 fi
 

@@ -336,6 +336,70 @@ _register_engine("fedzo-faults", "fedzo", defer_repair=True,
                  expect_eigh=False, n_array_psums=1, faulted=True)
 
 
+# -- partial-participation cohort engine (core/pool.py) ---------------------
+
+
+def _pool_chunk_fn(algo: str, distributed: bool, length: int = 2):
+    """The cohort chunk body EXACTLY as run_pooled_rounds builds it: the
+    round body compiles against the K-client cohort config and the masked
+    zero-rate sum_fn path (participation-weighted aggregation)."""
+    import dataclasses as _dc
+
+    from repro.core import objectives as obj
+    from repro.core import pool as pool_mod
+    from repro.core import rounds as rounds_mod
+    from repro.faults import FaultConfig
+
+    cfg, rff, quad, states, x0 = _fixture(algo, True)
+    cohort = cfg.n_clients // 2
+    ccfg = _dc.replace(cfg, n_clients=cohort)
+    bcfg = FaultConfig()  # zero rates: the pooled faults=None body
+    pool = pool_mod.ClientPool.from_states(states)
+    idx = pool_mod.sample_cohort(0, 0, cfg.n_clients, cohort)
+    mesh = _mesh() if distributed else None
+    cstates = pool.gather(idx, mesh=mesh)
+    c_quad = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[jnp.asarray(idx)], quad)
+    if distributed:
+        cf = rounds_mod.dist_chunk_fn(ccfg, mesh, rff, obj.quadratic_query,
+                                      obj.quadratic_global_value, length, 1, 4,
+                                      faults=bcfg)
+    else:
+        cf = rounds_mod.sim_chunk_fn(ccfg, rff, obj.quadratic_query,
+                                     obj.quadratic_global_value, None, length,
+                                     1, 4, faults=bcfg)
+    return cf, (cstates, c_quad, x0, jnp.int32(0))
+
+
+def _register_pool_engine(key: str, algo: str, n_array_psums: int) -> None:
+    """Cohort-engine census contract: the K-client cohort body must carry
+    EXACTLY the dense engine's collective count -- the participation
+    weighting rides inside the existing payload psums, so partial
+    participation changes the denominator, never the protocol."""
+    for dist in (False, True):
+        mode = "distributed" if dist else "simulate"
+        census = (
+            {"psum_array": n_array_psums, "psum_scalar": _SCALAR_PSUMS}
+            if dist else None
+        )
+
+        def chk(d=dist, c=census):
+            cf, args = _pool_chunk_fn(algo, d)
+            closed = jax.make_jaxpr(cf)(*args)
+            text = jax.jit(cf).lower(*args).as_text()
+            return _body_rules(closed, text, expect_eigh=False, census=c)
+
+        register(
+            f"{key}/{mode}",
+            f"{key} cohort round body ({mode}): eigh-free, no host ops, "
+            + (f"census {census} == dense engine" if census
+               else "collective-free"),
+        )(chk)
+
+
+_register_pool_engine("fzoos-pool", "fzoos", n_array_psums=2)
+_register_pool_engine("fedzo-pool", "fedzo", n_array_psums=1)
+
+
 def _chunk_step_donation(distributed: bool, faulted: bool = False) -> list[Violation]:
     from repro.core import rounds as rounds_mod
 

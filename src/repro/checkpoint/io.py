@@ -48,6 +48,7 @@ import numpy as np
 
 _BF16 = "bfloat16"
 _SHARDED_LAYOUT = "sharded-v1"
+_POOL_LAYOUT = "pool-v1"
 
 
 class CorruptCheckpointError(ValueError):
@@ -567,6 +568,134 @@ def restore_round_state(root: str, states_like, hist_like, step: int | None = No
         h_leaves.append(jax.device_put(got, rshard))
     hist = jax.tree_util.tree_unflatten(h_def, h_leaves)
     return states, hist, step
+
+
+# ---------------------------------------------------------------------------
+# Client-pool checkpoints (core/pool.py): host-resident per-shard layout
+# ---------------------------------------------------------------------------
+
+
+def prepare_pool_state(pool_leaves: list[np.ndarray], treedef_str: str,
+                       row_start: int, global_rows: int, history) -> dict:
+    """Snapshot of a client-pool checkpoint (core/pool.py).
+
+    The pool lives on the HOST (stacked numpy leaves, leading axis = this
+    process's rows), so the only device read here is the replicated history.
+    The pool leaves are COPIED: the next chunk's scatter mutates them in
+    place while the async writer is still serializing the snapshot.  The
+    payload reuses the ``step_<N>/shard_<p>`` layout of round-state
+    checkpoints (``write_round_state`` persists it unchanged), with
+    ``pool_<i>`` array keys and a ``pool-v1`` manifest tag.
+    """
+    arrays: dict[str, np.ndarray] = {}
+    p_tags: list[str] = []
+    for i, leaf in enumerate(pool_leaves):
+        arr, tag = _np_tag(np.array(leaf, copy=True))
+        arrays[f"pool_{i}"] = arr
+        p_tags.append(tag)
+    h_leaves, h_def = jax.tree_util.tree_flatten(history)
+    h_tags: list[str] = []
+    for i, leaf in enumerate(h_leaves):
+        arr, tag = _to_numpy(leaf)
+        arrays[f"hist_{i}"] = arr
+        h_tags.append(tag)
+    manifest = {
+        "layout": _POOL_LAYOUT,
+        "n_shards": jax.process_count(),
+        "pool": {
+            "treedef": treedef_str,
+            "n_leaves": len(pool_leaves),
+            "dtypes": p_tags,
+            "global_rows": int(global_rows),
+        },
+        "hist": {"treedef": str(h_def), "n_leaves": len(h_leaves), "dtypes": h_tags},
+    }
+    shard_meta = {
+        "shard": jax.process_index(),
+        "row_start": int(row_start),
+        "row_stop": int(row_start) + (int(pool_leaves[0].shape[0]) if pool_leaves else 0),
+    }
+    return {
+        "layout": "sharded",
+        "arrays": arrays,
+        "manifest": manifest,
+        "shard_meta": shard_meta,
+    }
+
+
+def restore_pool_state(root: str, pool_like: list[np.ndarray], hist_like,
+                       step: int | None = None):
+    """Inverse of ``prepare_pool_state`` + ``write_round_state``: returns
+    (host pool leaves, history, round_idx) for this process's row range.
+
+    Validates the ``pool-v1`` manifest (layout, shard count), per-array
+    checksums, and every leaf's shape/dtype against the ``pool_like``
+    templates -- the same loud-failure contract as ``restore_round_state``.
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    meta = load_meta(root, step)
+    if meta.get("layout") != _POOL_LAYOUT:
+        raise ValueError(
+            f"checkpoint step {step} under {root!r} has layout "
+            f"{meta.get('layout')!r}, expected {_POOL_LAYOUT!r} (a client-pool "
+            "checkpoint directory must not be shared with round-state runs)"
+        )
+    if meta.get("n_shards") != jax.process_count():
+        raise ValueError(
+            f"pool checkpoint was written by {meta.get('n_shards')} "
+            f"process(es), cannot restore with {jax.process_count()}"
+        )
+    path = os.path.join(root, f"step_{step:08d}")
+    sdir = os.path.join(path, f"shard_{jax.process_index():05d}")
+    with open(os.path.join(sdir, "shard.json")) as f:
+        shard_meta = json.load(f)
+    apath = os.path.join(sdir, "arrays.npz")
+    data = _load_npz(apath)
+    sums = shard_meta.get("checksums") or {}
+
+    def member(key: str) -> np.ndarray:
+        raw = _npz_member(data, key, apath)
+        if key in sums and _crc(raw) != sums[key]:
+            raise CorruptCheckpointError(
+                f"checksum mismatch at {key!r} in {apath!r}"
+            )
+        return raw
+
+    if len(pool_like) != meta["pool"]["n_leaves"]:
+        raise ValueError(
+            f"pool checkpoint has {meta['pool']['n_leaves']} leaves, "
+            f"template has {len(pool_like)}"
+        )
+    local_rows = shard_meta["row_stop"] - shard_meta["row_start"]
+    leaves = []
+    for i, want in enumerate(pool_like):
+        got = _np_from_tag(member(f"pool_{i}"), meta["pool"]["dtypes"][i])
+        _check_leaf(i, (local_rows,) + tuple(got.shape[1:]), str(got.dtype), want)
+        if got.shape[0] != local_rows:
+            raise ValueError(
+                f"shard rows [{shard_meta['row_start']}, "
+                f"{shard_meta['row_stop']}) disagree with stored block of "
+                f"{got.shape[0]} rows at pool leaf {i}"
+            )
+        leaves.append(np.array(got, copy=True))  # writable, owns its data
+
+    h_like, h_def = jax.tree_util.tree_flatten(hist_like)
+    if len(h_like) != meta["hist"]["n_leaves"]:
+        raise ValueError(
+            f"pool checkpoint has {meta['hist']['n_leaves']} hist leaves, "
+            f"template has {len(h_like)}"
+        )
+    h_leaves = []
+    for i, want in enumerate(h_like):
+        raw, tag = member(f"hist_{i}"), meta["hist"]["dtypes"][i]
+        got = _np_from_tag(raw, tag)
+        _check_leaf(i, got.shape, str(got.dtype), want)
+        h_leaves.append(_from_numpy(raw, tag))
+    hist = jax.tree_util.tree_unflatten(h_def, h_leaves)
+    return leaves, hist, step
 
 
 class AsyncCheckpointWriter:

@@ -753,6 +753,8 @@ def simulate(
     async_checkpoint: bool = True,
     faults=None,  # Optional[faults.FaultConfig]
     max_rollbacks: int = 3,
+    cohort: Optional[int] = None,
+    cohort_seed: int = 0,
 ) -> SimResult:
     """Run R communication rounds in a single process (clients via vmap).
 
@@ -766,6 +768,13 @@ def simulate(
     write with the next chunk (core/rounds.py).  ``eval_every=k`` evaluates
     the (possibly expensive) ``global_value_fn`` only every k-th round plus
     the final one; skipped ``f_values`` rows hold NaN (see SimResult).
+
+    ``cohort=K`` selects PARTIAL PARTICIPATION (core/pool.py): the N =
+    ``cfg.n_clients`` states live in a host-resident pool and each chunk a
+    deterministic cohort of K clients (keyed ``cohort_seed``) is gathered,
+    run through the scan engine, and scattered back, with the aggregation
+    renormalized by the live cohort count.  ``cohort=None`` (default) keeps
+    the dense all-clients engine; K = N is bitwise the dense engine.
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
@@ -777,6 +786,27 @@ def simulate(
     rff = None
     if cfg.is_fzoos:
         rff = rfflib.make_rff(rff_key if rff_key is not None else k_rff, cfg.n_features, cfg.dim, cfg.lengthscale)
+
+    if cohort is not None:
+        if chunk == 0:
+            raise ValueError("cohort (partial participation) requires the "
+                             "scan driver (chunk != 0); the dense engine at "
+                             "cohort == n_clients is the equivalence oracle")
+        from repro.core import pool as pool_mod  # deferred: avoids cycle
+        from repro.core import rounds as rounds_mod
+
+        pool = pool_mod.init_pool(cfg, k_init, x0)
+        _, res = pool_mod.run_pooled_rounds(
+            cfg, rff, query_fn, cobjs, pool, x0, global_value_fn,
+            rounds, chunk if chunk is not None else rounds_mod.DEFAULT_CHUNK,
+            cohort=cohort, cohort_seed=cohort_seed,
+            diag_global_grad=diag_global_grad,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            eval_every=eval_every, async_checkpoint=async_checkpoint,
+            faults=faults, max_rollbacks=max_rollbacks,
+        )
+        return res
+
     states = init_states(cfg, k_init, x0)
 
     if chunk is None or chunk > 0:
@@ -795,6 +825,11 @@ def simulate(
 
     if checkpoint_dir:
         raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
+    if faults is not None:
+        # Loop oracle matches the scan engine: a never-active window runs
+        # the faults-free body (see rounds.run_rounds).
+        from repro.faults.injector import effective_config
+        faults = effective_config(faults, rounds)
     mean_fn = lambda tree: jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0), tree)
 
     if faults is None:

@@ -159,6 +159,8 @@ def run_distributed(
     async_checkpoint: bool = True,
     faults=None,  # Optional[faults.FaultConfig]
     max_rollbacks: int = 3,
+    cohort: Optional[int] = None,
+    cohort_seed: int = 0,
 ) -> alg.SimResult:
     """Distributed analogue of algorithms.simulate (same history contract).
 
@@ -173,6 +175,12 @@ def run_distributed(
     the client-sharded state, the chunk-boundary repair decision stays on
     device, and with ``async_checkpoint`` the file write overlaps the next
     chunk -- the steady-state boundary performs zero host syncs.
+
+    ``cohort=K`` selects PARTIAL PARTICIPATION (core/pool.py): the full
+    N-client population lives in a host-resident pool -- never sharded onto
+    the mesh -- and each chunk a deterministic cohort of K clients is
+    gathered onto the mesh, scanned, and scattered back.  Only K must
+    divide the client shard count; N is a host-memory number.
     """
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None, 0 (loop oracle) or positive, got {chunk}")
@@ -184,6 +192,25 @@ def run_distributed(
     rff = None
     if cfg.is_fzoos:
         rff = rfflib.make_rff(k_rff, cfg.n_features, cfg.dim, cfg.lengthscale)
+
+    if cohort is not None:
+        if chunk == 0:
+            raise ValueError("cohort (partial participation) requires the "
+                             "scan driver (chunk != 0); the dense engine at "
+                             "cohort == n_clients is the equivalence oracle")
+        from repro.core import pool as pool_mod  # deferred: avoids cycle
+        from repro.core import rounds as rounds_mod
+
+        pool = pool_mod.init_pool(cfg, k_init, x0)
+        _, res = pool_mod.run_pooled_rounds(
+            cfg, rff, query_fn, cobjs, pool, x0, global_value_fn,
+            rounds, chunk if chunk is not None else rounds_mod.DEFAULT_CHUNK,
+            cohort=cohort, cohort_seed=cohort_seed, mesh=mesh,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            eval_every=eval_every, async_checkpoint=async_checkpoint,
+            faults=faults, max_rollbacks=max_rollbacks,
+        )
+        return res
 
     states = alg.init_states(cfg, k_init, x0)
     states = shard_clients(mesh, states)
@@ -207,6 +234,11 @@ def run_distributed(
         raise ValueError("checkpoint_dir requires the scan driver (chunk != 0)")
     from repro.core import rounds as rounds_mod  # deferred: avoids cycle
 
+    if faults is not None:
+        # Loop oracle matches the scan engine: a never-active window runs
+        # the faults-free body (see rounds.run_rounds).
+        from repro.faults.injector import effective_config
+        faults = effective_config(faults, rounds)
     round_fn = distributed_round_fn(cfg, mesh, rff, query_fn, faults=faults)
 
     xs = [x0]

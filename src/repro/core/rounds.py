@@ -560,6 +560,13 @@ def run_rounds(
     if chunk < 1:
         raise ValueError("run_rounds requires chunk >= 1 (chunk=0 selects the "
                          "Python-loop oracle in the front doors)")
+    if faults is not None:
+        # A config whose window can never fire inside [0, rounds) must not
+        # select the faulted engine (different compile key, extra psum
+        # columns, insurance checkpoint, per-boundary finiteness sync): the
+        # bitwise faults-off guarantee covers never-active windows too.
+        from repro.faults.injector import effective_config  # deferred import
+        faults = effective_config(faults, rounds)
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
     if mesh is not None and diag_global_grad is not None:
@@ -683,6 +690,13 @@ def run_rounds(
                             ckpt_io.write_round_state, checkpoint_dir, done,
                             payload, run_meta,
                         ))
+                        if done >= rounds:
+                            # FINAL boundary: there is no next submit to
+                            # surface this write's error, and raising it from
+                            # the post-loop drain would escape the rollback
+                            # machinery entirely.  Drain NOW so a failed last
+                            # write rolls back like any other boundary.
+                            writer.wait()
                     else:
                         ckpt_io.write_round_state(checkpoint_dir, done, payload,
                                                   extra_meta=run_meta)

@@ -18,6 +18,11 @@ from __future__ import annotations
 import numpy as np
 
 
+def _check_n_clients(n_clients: int) -> None:
+    if not isinstance(n_clients, (int, np.integer)) or n_clients < 1:
+        raise ValueError(f"n_clients={n_clients!r} must be an int >= 1")
+
+
 def label_subset_partition(
     labels: np.ndarray,
     n_clients: int,
@@ -27,6 +32,16 @@ def label_subset_partition(
 ) -> list[np.ndarray]:
     """Paper E.2/E.3: client i samples floor(P * C) classes and takes all
     points of those classes.  P = 1 -> every client sees everything."""
+    # Validate up front: p_shared > 1 would crash deep inside rng.choice
+    # with an opaque "cannot take a larger sample" error, and p_shared <= 0
+    # would silently degenerate to 1 class per client.
+    _check_n_clients(n_clients)
+    if not (np.isfinite(p_shared) and 0.0 < p_shared <= 1.0):
+        raise ValueError(
+            f"p_shared={p_shared!r} must be a fraction in (0, 1] of the label "
+            "classes each client sees (paper Appx. E.2: larger P = less "
+            "heterogeneity)"
+        )
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     n_take = max(int(round(p_shared * len(classes))), 1)
@@ -52,6 +67,14 @@ def dirichlet_partition(
 ) -> list[np.ndarray]:
     """Standard non-IID Dirichlet split: class-c points divided across
     clients with proportions ~ Dir(alpha).  Disjoint and exhaustive."""
+    # alpha <= 0 is outside the Dirichlet domain; numpy "accepts" it and
+    # returns NaN proportions, silently emptying every client.
+    _check_n_clients(n_clients)
+    if not (np.isfinite(alpha) and alpha > 0.0):
+        raise ValueError(
+            f"alpha={alpha!r} must be a positive finite Dirichlet "
+            "concentration (smaller alpha = more heterogeneity)"
+        )
     rng = np.random.default_rng(seed)
     out: list[list[int]] = [[] for _ in range(n_clients)]
     for c in np.unique(labels):

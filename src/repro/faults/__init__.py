@@ -7,7 +7,14 @@ utilities (torn writes, bit flips) -- the storage-fault half of the fault
 model, used by tests and the faults benchmark.
 """
 
-from repro.faults.injector import FaultConfig, FaultDraw, draw_faults, schedule_table
+from repro.faults.injector import (
+    FaultConfig,
+    FaultDraw,
+    draw_faults,
+    effective_config,
+    schedule_table,
+)
 from repro.faults import corrupt
 
-__all__ = ["FaultConfig", "FaultDraw", "draw_faults", "schedule_table", "corrupt"]
+__all__ = ["FaultConfig", "FaultDraw", "draw_faults", "effective_config",
+           "schedule_table", "corrupt"]

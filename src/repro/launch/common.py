@@ -80,7 +80,35 @@ def add_engine_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate global F only every k-th round (+ final); "
                          "skipped history rows hold NaN")
+    add_pool_flags(ap)
     add_fault_flags(ap)
+
+
+def add_pool_flags(ap: argparse.ArgumentParser) -> None:
+    """Partial-participation knobs (core/pool.py client pool)."""
+    ap.add_argument("--pool-size", type=int, default=None,
+                    help="total client population N held in the host-resident "
+                         "pool (overrides --clients; requires --cohort)")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="clients gathered onto the mesh per chunk (K <= N); "
+                         "enables the partial-participation engine")
+    ap.add_argument("--cohort-seed", type=int, default=0,
+                    help="PRNG seed of the deterministic cohort sampler "
+                         "(fold_in(seed, round) keying)")
+
+
+def pool_from_args(args: argparse.Namespace) -> tuple[int | None, int | None]:
+    """(n_clients override, cohort) from flags installed by
+    ``add_pool_flags``, validated loudly."""
+    if args.pool_size is not None:
+        if args.cohort is None:
+            raise SystemExit("--pool-size requires --cohort (K clients per "
+                             "round out of the N pooled)")
+        if args.pool_size < 1:
+            raise SystemExit(f"--pool-size {args.pool_size} must be >= 1")
+    if args.cohort is not None and args.cohort < 1:
+        raise SystemExit(f"--cohort {args.cohort} must be >= 1")
+    return args.pool_size, args.cohort
 
 
 def add_fault_flags(ap: argparse.ArgumentParser) -> None:

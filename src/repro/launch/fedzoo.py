@@ -75,13 +75,20 @@ def main() -> None:
     ap.add_argument("--distributed", action="store_true",
                     help="shard clients over the local device mesh via shard_map")
     common.add_algo_flags(ap)  # the shared AlgoConfig flag surface
-    common.add_engine_flags(ap)  # --chunk / --ckpt-dir / --eval-every
+    common.add_engine_flags(ap)  # --chunk / --ckpt-dir / --eval-every / pool
     args = ap.parse_args()
+
+    pool_size, cohort = common.pool_from_args(args)
+    if pool_size is not None:
+        # The pool IS the population: objectives and AlgoConfig are built
+        # for N clients; only the K-client cohort ever touches the mesh.
+        args.clients = pool_size
 
     key = jax.random.PRNGKey(args.seed)
     kobj, krun = jax.random.split(key)
     cobjs, query, global_value, dim = build_objective(args, kobj)
-    print(f"objective={args.objective} dim={dim} clients={args.clients} algo={args.algo}")
+    print(f"objective={args.objective} dim={dim} clients={args.clients} algo={args.algo}"
+          + (f" cohort={cohort}" if cohort is not None else ""))
 
     cfg = common.config_from_args(args, dim=dim, n_clients=args.clients)
     print(f"queries/round/client = {cfg.queries_per_round()}  "
@@ -99,14 +106,16 @@ def main() -> None:
                               checkpoint_every=args.ckpt_every,
                               eval_every=args.eval_every,
                               async_checkpoint=not args.sync_ckpt,
-                              faults=faults, max_rollbacks=args.max_rollbacks)
+                              faults=faults, max_rollbacks=args.max_rollbacks,
+                              cohort=cohort, cohort_seed=args.cohort_seed)
     else:
         res = alg.simulate(cfg, krun, cobjs, query, global_value, args.rounds,
                            chunk=args.chunk, checkpoint_dir=ckpt,
                            checkpoint_every=args.ckpt_every,
                            eval_every=args.eval_every,
                            async_checkpoint=not args.sync_ckpt,
-                           faults=faults, max_rollbacks=args.max_rollbacks)
+                           faults=faults, max_rollbacks=args.max_rollbacks,
+                           cohort=cohort, cohort_seed=args.cohort_seed)
     dt = time.time() - t0
 
     if jax.process_index() != 0:

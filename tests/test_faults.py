@@ -112,6 +112,42 @@ def test_rate_validation():
         FaultConfig(nan_rate=-0.1)
 
 
+def test_schedule_table_matches_per_round_draws():
+    """Regression: the vmapped one-dispatch schedule_table must be BITWISE
+    the per-round draw_faults loop it replaced (same fold_in keying per
+    row), window gating included."""
+    fcfg = FaultConfig(seed=9, drop_rate=0.3, straggle_rate=0.2, nan_rate=0.2,
+                       inf_rate=0.1, first_round=2, last_round=15)
+    tab = schedule_table(fcfg, 20, 6)
+    ids = jnp.arange(6, dtype=jnp.int32)
+    for r in range(20):
+        d = draw_faults(fcfg, jnp.int32(r), ids)
+        for k in d._fields:
+            np.testing.assert_array_equal(tab[k][r], np.asarray(getattr(d, k)),
+                                          err_msg=f"round {r} kind {k}")
+
+
+def test_statically_empty_window_never_injects():
+    """A config whose [first_round, last_round) window is empty can never
+    fire, whatever the rates: ``injects`` is False and the engine treats it
+    as faults=None."""
+    from repro.faults.injector import effective_config
+
+    assert not FaultConfig(nan_rate=0.5, first_round=5, last_round=5).injects
+    assert not FaultConfig(nan_rate=0.5, first_round=7, last_round=3).injects
+    # a non-empty window starting past the horizon injects in principle but
+    # is never ACTIVE inside this run: effective_config normalizes to None
+    late = FaultConfig(nan_rate=0.5, first_round=100)
+    assert late.injects and not late.active_in(8)
+    assert effective_config(late, 8) is None
+    assert effective_config(late, 200) is late
+    # zero rates pass through unchanged: an explicit --fault-tolerance
+    # masked-engine opt-in must keep selecting the masked engine
+    z = FaultConfig()
+    assert effective_config(z, 8) is z
+    assert effective_config(None, 8) is None
+
+
 # ---------------------------------------------------------------------------
 # Masked engine
 # ---------------------------------------------------------------------------
@@ -137,6 +173,39 @@ def test_faults_off_bitwise_distributed(quad):
     cfg = _fzoos_cfg()
     r0 = _dist(cfg, quad, chunk=4)
     r1 = _dist(cfg, quad, chunk=4, faults=FaultConfig())
+    np.testing.assert_array_equal(np.asarray(r0.xs), np.asarray(r1.xs))
+    np.testing.assert_array_equal(np.asarray(r0.f_values),
+                                  np.asarray(r1.f_values))
+
+
+def test_out_of_window_faults_bitwise_identity_sim(quad, tmp_path):
+    """Regression: a rates>0 config whose window never intersects the run
+    used to select the FAULTED engine (different compile key, masked psum
+    columns, insurance checkpoint, per-boundary finiteness sync) even
+    though it could never fire.  It must be BITWISE the faults=None run --
+    including writing NO step-0 insurance checkpoint."""
+    cfg = _fzoos_cfg()
+    wcfg = FaultConfig(seed=3, nan_rate=0.9, tolerate=False, first_round=100)
+    d = str(tmp_path / "ck")
+    r0 = _sim(cfg, quad, chunk=4)
+    # tolerate=False + nan_rate>0 would need a checkpoint_dir to roll back
+    # to if the faulted engine were selected -- running fine without one is
+    # itself evidence the window was normalized away
+    r1 = _sim(cfg, quad, chunk=4, faults=wcfg)
+    np.testing.assert_array_equal(np.asarray(r0.xs), np.asarray(r1.xs))
+    np.testing.assert_array_equal(np.asarray(r0.f_values),
+                                  np.asarray(r1.f_values))
+    np.testing.assert_array_equal(np.asarray(r0.queries),
+                                  np.asarray(r1.queries))
+    _sim(cfg, quad, chunk=4, faults=wcfg, checkpoint_dir=d)
+    assert 0 not in ckpt_io.list_steps(d)  # no rollback-insurance write
+
+
+def test_out_of_window_faults_bitwise_identity_distributed(quad):
+    cfg = _fzoos_cfg()
+    wcfg = FaultConfig(seed=3, nan_rate=0.9, tolerate=False, first_round=100)
+    r0 = _dist(cfg, quad, chunk=4)
+    r1 = _dist(cfg, quad, chunk=4, faults=wcfg)
     np.testing.assert_array_equal(np.asarray(r0.xs), np.asarray(r1.xs))
     np.testing.assert_array_equal(np.asarray(r0.f_values),
                                   np.asarray(r1.f_values))
@@ -350,6 +419,42 @@ def test_rollback_without_checkpoint_dir_fails_loudly(quad):
     fcfg = FaultConfig(seed=3, nan_rate=0.3, tolerate=False)
     with pytest.raises(FloatingPointError, match="no checkpoint_dir"):
         _sim(cfg, quad, chunk=4, faults=fcfg)
+
+
+def test_final_boundary_write_failure_rolls_back(quad, tmp_path, capsys,
+                                                 monkeypatch):
+    """Regression: a failed async write at the FINAL boundary used to
+    surface from the post-loop ``finally: writer.wait()`` drain -- escaping
+    the rollback machinery entirely and killing an otherwise-finished run.
+    The final boundary now drains inside the rollback-capable block: the
+    failure rolls back to the last good step and the replayed chunk
+    completes bitwise identically."""
+    cfg = _fzoos_cfg(local_steps=2)
+    d_ref = str(tmp_path / "ref")
+    r_ref = _sim(cfg, quad, chunk=4, checkpoint_dir=d_ref,
+                 faults=FaultConfig())
+
+    real = ckpt_io.write_round_state
+    fails = []
+
+    def flaky(root, round_idx, payload, extra_meta=None):
+        # exhaust one full submit cycle (1 try + 2 writer retries) of the
+        # LAST boundary's write, then heal for the post-rollback replay
+        if round_idx == ROUNDS and len(fails) < 3:
+            fails.append(1)
+            raise OSError("injected: final write torn")
+        return real(root, round_idx, payload, extra_meta=extra_meta)
+
+    monkeypatch.setattr(ckpt_io, "write_round_state", flaky)
+    d = str(tmp_path / "ck")
+    r = _sim(cfg, quad, chunk=4, checkpoint_dir=d, faults=FaultConfig())
+    assert len(fails) == 3  # the injected failure was actually exercised
+    out = capsys.readouterr().out
+    assert "ROLLBACK" in out
+    assert ckpt_io.latest_step(d) == ROUNDS  # the replayed final write landed
+    np.testing.assert_array_equal(np.asarray(r_ref.xs), np.asarray(r.xs))
+    np.testing.assert_array_equal(np.asarray(r_ref.f_values),
+                                  np.asarray(r.f_values))
 
 
 def test_resume_identity_includes_faults(quad, tmp_path):

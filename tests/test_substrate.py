@@ -124,6 +124,31 @@ def test_dirichlet_partition_is_disjoint_and_exhaustive(n_clients, alpha, seed):
     assert len(np.unique(allidx)) == 300
 
 
+def test_label_subset_partition_validates_hyperparameters():
+    """Regression: p_shared > 1 used to crash deep inside rng.choice with an
+    opaque 'cannot take a larger sample' error, and p_shared <= 0 silently
+    degenerated to 1 class per client."""
+    labels = np.arange(20) % 5
+    for bad_p in (0.0, -0.3, 1.5, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="p_shared"):
+            label_subset_partition(labels, 4, bad_p)
+    for bad_n in (0, -2, 2.5):
+        with pytest.raises(ValueError, match="n_clients"):
+            label_subset_partition(labels, bad_n, 0.5)
+
+
+def test_dirichlet_partition_validates_hyperparameters():
+    """Regression: alpha <= 0 is outside the Dirichlet domain but numpy
+    'accepts' it, returning NaN proportions that silently empty clients."""
+    labels = np.arange(20) % 5
+    for bad_a in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="alpha"):
+            dirichlet_partition(labels, 4, bad_a)
+    for bad_n in (0, -2, 2.5):
+        with pytest.raises(ValueError, match="n_clients"):
+            dirichlet_partition(labels, bad_n, 1.0)
+
+
 def test_checkpoint_roundtrip_with_bf16(tmp_path):
     tree = {
         "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
