@@ -33,7 +33,19 @@ BENCH_ONLY="${BENCH_ONLY:-rounds,kernels}"
 
 if [[ "${1:-}" == "--static" ]]; then
     echo "== static gate: compiled-program contracts =="
-    python -m repro.analysis
+    # Engine contracts + the Pallas kernel-launch audit + the PRNG key-flow
+    # lint, with the machine-readable report CI uploads as an artifact.
+    # CONTRACT_FLOOR guards against registrations silently vanishing (e.g.
+    # an import-time exception swallowing half the registry).
+    CONTRACT_FLOOR="${CONTRACT_FLOOR:-27}"
+    REPORT="${ANALYSIS_REPORT:-analysis_report.json}"
+    python -m repro.analysis --json "${REPORT}"
+    N_CONTRACTS=$(python -c "import json; print(json.load(open('${REPORT}'))['n_contracts'])")
+    echo "static gate: ${N_CONTRACTS} contract(s) ran (floor ${CONTRACT_FLOOR}), report: ${REPORT}"
+    if [[ "${N_CONTRACTS}" -lt "${CONTRACT_FLOOR}" ]]; then
+        echo "ERROR: only ${N_CONTRACTS} contracts ran, below the floor of ${CONTRACT_FLOOR}" >&2
+        exit 1
+    fi
 
     echo "== static gate: ruff =="
     if command -v ruff >/dev/null 2>&1; then

@@ -13,11 +13,19 @@ assertions into declared contracts linted WITHOUT executing anything:
   * ``hlo_audit``   -- lowered-HLO auditor: backend custom-call
     fingerprints (eigh/syev, cholesky/potrf), collective census,
     input-output aliasing (donation);
+  * ``kernel_audit`` -- static Pallas launch verifier over the declarative
+    ``kernels.spec.KernelSpec`` geometry: write races, output coverage,
+    out-of-bounds index maps, accumulator init/dtype discipline, per-cell
+    VMEM budget -- proven by grid enumeration, below the jaxpr, without
+    lowering;
+  * ``key_flow``    -- PRNG key dataflow lint over entry-point jaxprs:
+    a key consumed by two primitives, threaded unsplit through a scan
+    carry, or hard-coded (with ``# key-flow: ok`` source suppression);
   * ``contracts``   -- the per-engine contract registry + the steady-state
     recompile/sync guard;
   * ``runner``      -- ``python -m repro.analysis``: lower every registered
     (algorithm, engine-flag) combination and report violations with
-    jaxpr source locations.
+    jaxpr source locations (``--json`` for the machine-readable report).
 """
 
 from repro.analysis.jaxpr_lint import Violation  # noqa: F401
@@ -27,5 +35,15 @@ from repro.analysis.contracts import (  # noqa: F401
     check_contract,
     no_recompiles,
     steady_state_guard,
+)
+from repro.analysis.kernel_audit import (  # noqa: F401
+    audit_spec,
+    check_geometry,
+    check_vmem,
+)
+from repro.analysis.key_flow import (  # noqa: F401
+    KeyFlowReport,
+    analyze_key_flow,
+    check_key_flow,
 )
 from repro.analysis.runner import check_all, main  # noqa: F401

@@ -502,3 +502,185 @@ def _optimizer_dtype_contract() -> list[Violation]:
             out.append(dataclasses.replace(
                 v, message=f"{name}: {v.message}"))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Static kernel-launch contracts (analysis/kernel_audit.py over KernelSpec)
+# ---------------------------------------------------------------------------
+
+#: Audit shapes: small enough to enumerate the grid instantly, large enough
+#: that every kernel is genuinely tiled (several blocks per axis).
+_KAUDIT_N, _KAUDIT_CAP, _KAUDIT_D = 64, 512, 32
+_KAUDIT_BN, _KAUDIT_BC = 16, 128
+_KAUDIT_NB = 4  # client batch of the *_clients variants
+
+
+def _register_kernel_contract(key: str, make_specs, description: str) -> None:
+    def chk():
+        from repro.analysis import kernel_audit
+
+        out: list[Violation] = []
+        for spec in make_specs():
+            out += kernel_audit.audit_spec(spec)
+        return out
+
+    register(f"kernel/{key}", description)(chk)
+
+
+def _gp_specs(builder, *, tiled: bool, clients: bool):
+    """The f32 spec plus -- for the tiled accumulator kernels -- the bf16
+    variant, which must keep its scratch accumulators in f32."""
+
+    def make():
+        shape = (_KAUDIT_N, _KAUDIT_CAP if tiled else _KAUDIT_BC, _KAUDIT_D)
+        blocks = {"block_n": _KAUDIT_BN}
+        if tiled:
+            blocks["block_cap"] = _KAUDIT_BC
+        dtypes = (jnp.float32, jnp.bfloat16) if tiled else (jnp.float32,)
+        for dt in dtypes:
+            if clients:
+                yield builder(_KAUDIT_NB, *shape, dt, **blocks)
+            else:
+                yield builder(*shape, dt, **blocks)
+
+    return make
+
+
+def _register_gp_kernel_contracts() -> None:
+    from repro.kernels import gp_grad, gp_score
+
+    for mod, stem in ((gp_score, "gp-score"), (gp_grad, "gp-grad")):
+        pre = "score" if stem == "gp-score" else "grad"
+        for variant, tiled, clients in (
+            ("resident", False, False),
+            ("clients", False, True),
+            ("tiled", True, False),
+            ("tiled-clients", True, True),
+        ):
+            builder = getattr(mod, f"{pre}_{variant.replace('-', '_')}_spec")
+            _register_kernel_contract(
+                f"{stem}-{variant}",
+                _gp_specs(builder, tiled=tiled, clients=clients),
+                f"{stem}.{variant} launch geometry: race-free, covered, "
+                "in-bounds, accumulator-disciplined, in VMEM budget"
+                + (" (f32 + bf16-in/f32-scratch)" if tiled else ""),
+            )
+
+
+_register_gp_kernel_contracts()
+
+def _rff_features_specs():
+    from repro.kernels.rff_features import features_spec
+
+    return [features_spec(128, 256, _KAUDIT_D, jnp.float32,
+                          block_n=64, block_m=128)]
+
+
+def _rff_grad_specs():
+    from repro.kernels.rff_grad import grad_spec
+
+    return [grad_spec(128, 256, _KAUDIT_D, jnp.float32,
+                      block_n=64, block_m=128)]
+
+
+def _sqexp_specs():
+    from repro.kernels.sqexp import sqexp_spec
+
+    return [sqexp_spec(128, 256, _KAUDIT_D, jnp.float32,
+                       block_n=64, block_m=128)]
+
+
+_register_kernel_contract(
+    "rff-features", _rff_features_specs,
+    "rff_features launch geometry: one writer per output tile, in budget",
+)
+_register_kernel_contract(
+    "rff-grad", _rff_grad_specs,
+    "rff_grad launch geometry: M-axis reduction accumulates in the output "
+    "ref (f32 only: the output IS the accumulator, so bf16 would trip "
+    "kernel-accum-dtype -- see tests)",
+)
+_register_kernel_contract(
+    "sqexp", _sqexp_specs,
+    "sqexp launch geometry: one writer per output tile, in budget",
+)
+
+
+@register(
+    "kernel/autotune-candidates",
+    "every block pair the tuner's feasibility filter can emit (score + "
+    "grad, f32 + bf16, cap=1024) fits the TPU VMEM budget as a real "
+    "KernelSpec launch",
+)
+def _autotune_candidates_contract() -> list[Violation]:
+    import numpy as np
+
+    from repro.analysis import kernel_audit
+    from repro.kernels import autotune
+    from repro.kernels.gp_grad import grad_tiled_spec
+    from repro.kernels.gp_score import score_tiled_spec
+    from repro.launch.mesh import BACKEND_ROOFLINE
+
+    hw = BACKEND_ROOFLINE["tpu"]
+    n, cap, d = 256, 1024, 64
+    out: list[Violation] = []
+    for kind, builder in (("score", score_tiled_spec),
+                          ("grad", grad_tiled_spec)):
+        for dt in (jnp.float32, jnp.bfloat16):
+            itemsize = np.dtype(dt).itemsize
+            for bn, bc in autotune._feasible(kind, n, cap, d, hw, itemsize):
+                if bc > cap:
+                    continue  # routes to the resident kernel, not this spec
+                spec = builder(n, cap, d, dt, block_n=bn, block_cap=bc)
+                out += kernel_audit.check_vmem(spec, backend="tpu")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PRNG key-flow contracts (analysis/key_flow.py over engine entry points)
+# ---------------------------------------------------------------------------
+
+
+def _register_key_flow(key: str, algo: str, defer_repair: bool) -> None:
+    @register(
+        f"key-flow/{key}",
+        f"{key} round body: no PRNG key consumed twice, no key threaded "
+        "unsplit through a scan carry, no unsuppressed hard-coded seed",
+    )
+    def _chk() -> list[Violation]:
+        from repro.analysis import key_flow
+
+        closed, _ = _body_artifacts(algo, defer_repair, False)
+        return key_flow.check_key_flow(closed)
+
+
+_register_key_flow("fzoos-deferred", "fzoos", True)
+_register_key_flow("fzoos-inline", "fzoos", False)
+_register_key_flow("fedzo", "fedzo", True)
+_register_key_flow("fd-fedprox", "fedprox", True)
+
+
+@register(
+    "key-flow/init-states",
+    "init_states: the constant direction-bank key (Prop. D.4) is the ONLY "
+    "hard-coded seed, and it is explicitly suppressed in source",
+)
+def _init_states_key_flow() -> list[Violation]:
+    from repro.analysis import key_flow
+    from repro.core import algorithms as alg
+
+    cfg, _, _, _, x0 = _fixture("fzoos", True)
+    closed = jax.make_jaxpr(
+        lambda key, x: alg.init_states(cfg, key, x)
+    )(jax.random.PRNGKey(2), x0)
+    report = key_flow.analyze_key_flow(closed)
+    out = list(report.violations)
+    if not report.suppressed:
+        out.append(Violation(
+            rule="key-flow-suppression-missing",
+            message="init_states no longer carries the suppressed "
+                    "constant-bank finding; if the bank key became "
+                    "caller-derived, Prop. D.4 (identical banks across "
+                    "clients) needs a new witness",
+        ))
+    return out

@@ -11,6 +11,8 @@ path, and jaxpr source location.  Wired into ``benchmarks/verify.sh
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 import time
 from typing import Iterable, Optional
@@ -72,6 +74,9 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="comma-separated contract names (default: all)")
     ap.add_argument("--list", action="store_true",
                     help="list registered contracts and exit")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write a machine-readable report (per-contract "
+                         "violations + totals) to PATH, '-' for stdout")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -84,6 +89,26 @@ def main(argv: Optional[list[str]] = None) -> int:
     results = check_all(names, verbose=args.verbose)
     n_bad = sum(1 for v in results.values() if v)
     n_violations = sum(len(v) for v in results.values())
+    if args.json:
+        report = {
+            "contracts": {
+                name: {
+                    "description": CONTRACTS[name].description,
+                    "violations": [dataclasses.asdict(v) for v in vs],
+                }
+                for name, vs in results.items()
+            },
+            "n_contracts": len(results),
+            "n_violated": n_bad,
+            "n_violations": n_violations,
+            "clean": n_bad == 0,
+        }
+        text = json.dumps(report, indent=2, default=str)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
     if n_bad:
         print(f"repro.analysis: {n_bad}/{len(results)} contract(s) violated "
               f"({n_violations} violation(s))")

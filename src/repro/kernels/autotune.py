@@ -128,6 +128,44 @@ def _feasible(kind: str, n: int, cap: int, d: int, hw: dict,
                 yield bn, bc
 
 
+def validate_blocks(
+    kind: str,
+    *,
+    block_n: int,
+    block_cap: int,
+    cap: int,
+    d: int,
+    backend: Optional[str] = None,
+    dtype: Any = None,
+) -> tuple[int, int]:
+    """Validate a USER-PINNED ``(block_n, block_cap)`` pair against the
+    backend VMEM budget -- the same footprint model and 0.75 budget the
+    tuner's feasibility filter uses -- and raise a loud ``ValueError``
+    naming the block and the budget when it cannot fit.  Tuner-chosen
+    blocks are feasible by construction; explicit ``AlgoConfig`` pins are
+    not, and an infeasible pin would otherwise surface as an opaque
+    Mosaic/XLA allocation failure deep inside the round body.
+    """
+    backend = backend or jax.default_backend()
+    hw = BACKEND_ROOFLINE.get(backend, BACKEND_ROOFLINE["_default"])
+    budget = int(0.75 * hw["vmem_bytes"])
+    itemsize = np.dtype(_dtype_name(dtype)).itemsize
+    # block_cap >= cap routes to the VMEM-resident kernel: the working set
+    # is the lane-padded cap, not the nominal (possibly huge) pin.
+    bc_eff = min(block_cap, _round_up(max(cap, 1), _LANE))
+    need = _vmem_cell_bytes(kind, block_n, bc_eff, d, itemsize)
+    if need > budget:
+        raise ValueError(
+            f"pinned {kind} blocks (block_n={block_n}, block_cap={block_cap})"
+            f" need {need} bytes of VMEM per grid cell at d={d} "
+            f"({_dtype_name(dtype)}), exceeding the {backend!r} budget of "
+            f"{budget} bytes (0.75 x vmem_bytes={hw['vmem_bytes']}); pick "
+            "smaller AlgoConfig block pins or leave them unset for the "
+            "autotuner"
+        )
+    return block_n, block_cap
+
+
 def select_blocks(
     kind: str,
     *,

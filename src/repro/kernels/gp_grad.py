@@ -28,6 +28,11 @@ Two kernel families share the tile numerics:
 ``*_clients_kernel`` variants add a CLIENT grid dimension for the batched
 federated engine: one launch computes the gradient mean for the whole
 client batch instead of N vmapped launches.
+
+Every launch is constructed from a declarative ``KernelSpec``
+(``grad_*_spec`` builders below): the spec both builds the real
+``pl.pallas_call`` and feeds the static auditor in
+``repro.analysis.kernel_audit`` (DESIGN.md Sec. 7).
 """
 
 from __future__ import annotations
@@ -37,7 +42,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec, ScratchDecl
 
 
 def _grad_block(c, x, alpha, *, inv_two_l2: float, inv_l2: float):
@@ -61,6 +67,27 @@ def _kernel(c_ref, x_ref, a_ref, o_ref, **kw):
     o_ref[...] = _grad_block(c_ref[...], x_ref[...], a_ref[...], **kw).astype(o_ref.dtype)
 
 
+def grad_resident_spec(n: int, cap: int, d: int, dtype, *,
+                       block_n: int) -> KernelSpec:
+    """Launch geometry of the VMEM-resident gradient-mean kernel."""
+    return KernelSpec(
+        name="gp_grad.resident",
+        grid=(n // block_n,),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((cap, d), dtype),
+            ArraySpec((1, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i: (i, 0)),
+            BlockDecl((cap, d), lambda i: (0, 0)),
+            BlockDecl((1, cap), lambda i: (0, 0)),
+        ),
+        out_shapes=(ArraySpec((n, d), dtype),),
+        out_specs=(BlockDecl((block_n, d), lambda i: (i, 0)),),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("lengthscale", "block_n", "interpret"))
 def grad_mean_kernel(
     cands: jax.Array,
@@ -75,19 +102,11 @@ def grad_mean_kernel(
     cap = xs.shape[0]
     assert n % block_n == 0, (n, block_n)
     assert alpha.shape == (1, cap), alpha.shape
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    spec = grad_resident_spec(n, cap, d, cands.dtype, block_n=block_n)
+    return spec.pallas_call(
         functools.partial(
             _kernel, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
         ),
-        out_shape=jax.ShapeDtypeStruct((n, d), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((cap, d), lambda i: (0, 0)),
-            pl.BlockSpec((1, cap), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
         interpret=interpret,
     )(cands, xs, alpha)
 
@@ -96,6 +115,27 @@ def _kernel_clients(c_ref, x_ref, a_ref, o_ref, **kw):
     # Leading block dim of every ref is the (size-1) client slot; the tile
     # numerics are shared with the unbatched kernel (_grad_block).
     o_ref[0] = _grad_block(c_ref[0], x_ref[0], a_ref[0], **kw).astype(o_ref.dtype)
+
+
+def grad_clients_spec(nb: int, n: int, cap: int, d: int, dtype, *,
+                      block_n: int) -> KernelSpec:
+    """Launch geometry of the client-batched resident gradient-mean kernel."""
+    return KernelSpec(
+        name="gp_grad.clients",
+        grid=(nb, n // block_n),
+        in_shapes=(
+            ArraySpec((nb, n, d), dtype),
+            ArraySpec((nb, cap, d), dtype),
+            ArraySpec((nb, 1, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((1, block_n, d), lambda b, i: (b, i, 0)),
+            BlockDecl((1, cap, d), lambda b, i: (b, 0, 0)),
+            BlockDecl((1, 1, cap), lambda b, i: (b, 0, 0)),
+        ),
+        out_shapes=(ArraySpec((nb, n, d), dtype),),
+        out_specs=(BlockDecl((1, block_n, d), lambda b, i: (b, i, 0)),),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("lengthscale", "block_n", "interpret"))
@@ -114,19 +154,11 @@ def grad_mean_clients_kernel(
     assert n % block_n == 0, (n, block_n)
     assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
     assert alpha.shape == (nb, 1, cap), alpha.shape
-    grid = (nb, n // block_n)
-    return pl.pallas_call(
+    spec = grad_clients_spec(nb, n, cap, d, cands.dtype, block_n=block_n)
+    return spec.pallas_call(
         functools.partial(
             _kernel_clients, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
         ),
-        out_shape=jax.ShapeDtypeStruct((nb, n, d), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, cap, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, 1, cap), lambda b, i: (b, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
         interpret=interpret,
     )(cands, xs, alpha)
 
@@ -175,6 +207,35 @@ def _kernel_tiled(c_ref, x_ref, a_ref, o_ref, acc_ref, s_ref, *,
         ).astype(o_ref.dtype)
 
 
+def grad_tiled_spec(n: int, cap: int, d: int, dtype, *, block_n: int,
+                    block_cap: int) -> KernelSpec:
+    """Launch geometry of the cap-tiled gradient-mean kernel.  The trailing
+    grid axis revisits each (block_n, d) output block while two f32
+    scratch buffers hold the running contraction and weight sum."""
+    return KernelSpec(
+        name="gp_grad.tiled",
+        grid=(n // block_n, cap // block_cap),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((cap, d), dtype),
+            ArraySpec((1, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i, j: (i, 0)),
+            BlockDecl((block_cap, d), lambda i, j: (j, 0)),
+            BlockDecl((1, block_cap), lambda i, j: (0, j)),
+        ),
+        out_shapes=(ArraySpec((n, d), dtype),),
+        out_specs=(BlockDecl((block_n, d), lambda i, j: (i, 0)),),
+        scratch=(
+            ScratchDecl((block_n, d), jnp.float32),
+            ScratchDecl((block_n, 1), jnp.float32),
+        ),
+        revisit_axes=(1,),
+        init_axes=(1,),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("lengthscale", "block_n", "block_cap", "interpret")
 )
@@ -194,23 +255,12 @@ def grad_mean_tiled_kernel(
     assert n % block_n == 0, (n, block_n)
     assert cap % block_cap == 0, (cap, block_cap)
     assert alpha.shape == (1, cap), alpha.shape
-    grid = (n // block_n, cap // block_cap)
-    return pl.pallas_call(
+    spec = grad_tiled_spec(n, cap, d, cands.dtype,
+                           block_n=block_n, block_cap=block_cap)
+    return spec.pallas_call(
         functools.partial(
             _kernel_tiled, inv_two_l2=0.5 / (lengthscale**2), inv_l2=1.0 / (lengthscale**2)
         ),
-        out_shape=jax.ShapeDtypeStruct((n, d), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_cap, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, block_cap), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((block_n, d), jnp.float32),
-            pltpu.VMEM((block_n, 1), jnp.float32),
-        ],
         interpret=interpret,
     )(cands, xs, alpha)
 
@@ -234,6 +284,33 @@ def _kernel_tiled_clients(c_ref, x_ref, a_ref, o_ref, acc_ref, s_ref, *,
         ).astype(o_ref.dtype)
 
 
+def grad_tiled_clients_spec(nb: int, n: int, cap: int, d: int, dtype, *,
+                            block_n: int, block_cap: int) -> KernelSpec:
+    """Launch geometry of the client-batched cap-tiled gradient-mean kernel."""
+    return KernelSpec(
+        name="gp_grad.tiled_clients",
+        grid=(nb, n // block_n, cap // block_cap),
+        in_shapes=(
+            ArraySpec((nb, n, d), dtype),
+            ArraySpec((nb, cap, d), dtype),
+            ArraySpec((nb, 1, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((1, block_n, d), lambda b, i, j: (b, i, 0)),
+            BlockDecl((1, block_cap, d), lambda b, i, j: (b, j, 0)),
+            BlockDecl((1, 1, block_cap), lambda b, i, j: (b, 0, j)),
+        ),
+        out_shapes=(ArraySpec((nb, n, d), dtype),),
+        out_specs=(BlockDecl((1, block_n, d), lambda b, i, j: (b, i, 0)),),
+        scratch=(
+            ScratchDecl((block_n, d), jnp.float32),
+            ScratchDecl((block_n, 1), jnp.float32),
+        ),
+        revisit_axes=(2,),
+        init_axes=(2,),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("lengthscale", "block_n", "block_cap", "interpret")
 )
@@ -255,24 +332,13 @@ def grad_mean_tiled_clients_kernel(
     assert cap % block_cap == 0, (cap, block_cap)
     assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
     assert alpha.shape == (nb, 1, cap), alpha.shape
-    grid = (nb, n // block_n, cap // block_cap)
-    return pl.pallas_call(
+    spec = grad_tiled_clients_spec(nb, n, cap, d, cands.dtype,
+                                   block_n=block_n, block_cap=block_cap)
+    return spec.pallas_call(
         functools.partial(
             _kernel_tiled_clients,
             inv_two_l2=0.5 / (lengthscale**2),
             inv_l2=1.0 / (lengthscale**2),
         ),
-        out_shape=jax.ShapeDtypeStruct((nb, n, d), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_cap, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, 1, block_cap), lambda b, i, j: (b, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, i, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((block_n, d), jnp.float32),
-            pltpu.VMEM((block_n, 1), jnp.float32),
-        ],
         interpret=interpret,
     )(cands, xs, alpha)

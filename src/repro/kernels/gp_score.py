@@ -39,6 +39,11 @@ Two kernel families share the tile numerics:
 ``*_clients_kernel`` variants add a leading CLIENT grid dimension for the
 batched federated engine: one launch scores the whole client batch instead
 of N vmapped launches.
+
+Every launch is constructed from a declarative ``KernelSpec``
+(``score_*_spec`` builders below): the spec both builds the real
+``pl.pallas_call`` and feeds the static auditor in
+``repro.analysis.kernel_audit`` (DESIGN.md Sec. 7).
 """
 
 from __future__ import annotations
@@ -48,7 +53,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec, ScratchDecl
 
 
 def _h_tile(c, n1, x, inv_two_l2: float):
@@ -83,6 +89,29 @@ def _kernel(c_ref, x_ref, b_ref, p_ref, o_ref, **kw):
     ).astype(o_ref.dtype)
 
 
+def score_resident_spec(n: int, cap: int, d: int, dtype, *,
+                        block_n: int) -> KernelSpec:
+    """Launch geometry of the VMEM-resident scoring kernel."""
+    return KernelSpec(
+        name="gp_score.resident",
+        grid=(n // block_n,),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((cap, d), dtype),
+            ArraySpec((cap, cap), dtype),
+            ArraySpec((cap, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i: (i, 0)),
+            BlockDecl((cap, d), lambda i: (0, 0)),
+            BlockDecl((cap, cap), lambda i: (0, 0)),
+            BlockDecl((cap, cap), lambda i: (0, 0)),
+        ),
+        out_shapes=(ArraySpec((n, 1), dtype),),
+        out_specs=(BlockDecl((block_n, 1), lambda i: (i, 0)),),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("lengthscale", "prior", "block_n", "interpret")
 )
@@ -101,23 +130,14 @@ def uncertainty_scores_kernel(
     cap = xs.shape[0]
     assert n % block_n == 0, (n, block_n)
     assert binv.shape == pmat.shape == (cap, cap), (binv.shape, pmat.shape, cap)
-    grid = (n // block_n,)
-    out = pl.pallas_call(
+    spec = score_resident_spec(n, cap, d, cands.dtype, block_n=block_n)
+    out = spec.pallas_call(
         functools.partial(
             _kernel,
             inv_two_l2=0.5 / (lengthscale**2),
             inv_l4=1.0 / (lengthscale**4),
             prior=prior,
         ),
-        out_shape=jax.ShapeDtypeStruct((n, 1), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((cap, d), lambda i: (0, 0)),
-            pl.BlockSpec((cap, cap), lambda i: (0, 0)),
-            pl.BlockSpec((cap, cap), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
         interpret=interpret,
     )(cands, xs, binv, pmat)
     return out[:, 0]
@@ -129,6 +149,29 @@ def _kernel_clients(c_ref, x_ref, b_ref, p_ref, o_ref, **kw):
     o_ref[0] = _score_block(
         c_ref[0], x_ref[0], b_ref[0], p_ref[0], **kw
     ).astype(o_ref.dtype)
+
+
+def score_clients_spec(nb: int, n: int, cap: int, d: int, dtype, *,
+                       block_n: int) -> KernelSpec:
+    """Launch geometry of the client-batched resident scoring kernel."""
+    return KernelSpec(
+        name="gp_score.clients",
+        grid=(nb, n // block_n),
+        in_shapes=(
+            ArraySpec((nb, n, d), dtype),
+            ArraySpec((nb, cap, d), dtype),
+            ArraySpec((nb, cap, cap), dtype),
+            ArraySpec((nb, cap, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((1, block_n, d), lambda b, i: (b, i, 0)),
+            BlockDecl((1, cap, d), lambda b, i: (b, 0, 0)),
+            BlockDecl((1, cap, cap), lambda b, i: (b, 0, 0)),
+            BlockDecl((1, cap, cap), lambda b, i: (b, 0, 0)),
+        ),
+        out_shapes=(ArraySpec((nb, n, 1), dtype),),
+        out_specs=(BlockDecl((1, block_n, 1), lambda b, i: (b, i, 0)),),
+    )
 
 
 @functools.partial(
@@ -151,23 +194,14 @@ def uncertainty_scores_clients_kernel(
     assert n % block_n == 0, (n, block_n)
     assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
     assert binv.shape == pmat.shape == (nb, cap, cap), (binv.shape, pmat.shape)
-    grid = (nb, n // block_n)
-    out = pl.pallas_call(
+    spec = score_clients_spec(nb, n, cap, d, cands.dtype, block_n=block_n)
+    out = spec.pallas_call(
         functools.partial(
             _kernel_clients,
             inv_two_l2=0.5 / (lengthscale**2),
             inv_l4=1.0 / (lengthscale**4),
             prior=prior,
         ),
-        out_shape=jax.ShapeDtypeStruct((nb, n, 1), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, cap, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, cap, cap), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, cap, cap), lambda b, i: (b, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_n, 1), lambda b, i: (b, i, 0)),
         interpret=interpret,
     )(cands, xs, binv, pmat)
     return out[:, :, 0]
@@ -226,6 +260,37 @@ def _kernel_tiled(c_ref, xj_ref, xk_ref, b_ref, p_ref, o_ref, acc_ref, *,
         ).astype(o_ref.dtype)
 
 
+def score_tiled_spec(n: int, cap: int, d: int, dtype, *, block_n: int,
+                     block_cap: int) -> KernelSpec:
+    """Launch geometry of the cap-tiled scoring kernel.  The trailing two
+    grid axes revisit each (block_n, 1) output block while the f32 scratch
+    accumulates the bilinear form; xs is passed twice (the j- and k-tile
+    views of the same trajectory array)."""
+    return KernelSpec(
+        name="gp_score.tiled",
+        grid=(n // block_n, cap // block_cap, cap // block_cap),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((cap, d), dtype),
+            ArraySpec((cap, d), dtype),
+            ArraySpec((cap, cap), dtype),
+            ArraySpec((cap, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i, j, k: (i, 0)),
+            BlockDecl((block_cap, d), lambda i, j, k: (j, 0)),
+            BlockDecl((block_cap, d), lambda i, j, k: (k, 0)),
+            BlockDecl((block_cap, block_cap), lambda i, j, k: (j, k)),
+            BlockDecl((block_cap, block_cap), lambda i, j, k: (j, k)),
+        ),
+        out_shapes=(ArraySpec((n, 1), dtype),),
+        out_specs=(BlockDecl((block_n, 1), lambda i, j, k: (i, 0)),),
+        scratch=(ScratchDecl((block_n, 1), jnp.float32),),
+        revisit_axes=(1, 2),
+        init_axes=(1, 2),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("lengthscale", "prior", "block_n", "block_cap", "interpret"),
@@ -248,25 +313,15 @@ def uncertainty_scores_tiled_kernel(
     assert n % block_n == 0, (n, block_n)
     assert cap % block_cap == 0, (cap, block_cap)
     assert binv.shape == pmat.shape == (cap, cap), (binv.shape, pmat.shape, cap)
-    grid = (n // block_n, cap // block_cap, cap // block_cap)
-    out = pl.pallas_call(
+    spec = score_tiled_spec(n, cap, d, cands.dtype,
+                            block_n=block_n, block_cap=block_cap)
+    out = spec.pallas_call(
         functools.partial(
             _kernel_tiled,
             inv_two_l2=0.5 / (lengthscale**2),
             inv_l4=1.0 / (lengthscale**4),
             prior=prior,
         ),
-        out_shape=jax.ShapeDtypeStruct((n, 1), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((block_cap, d), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((block_cap, d), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((block_cap, block_cap), lambda i, j, k: (j, k)),
-            pl.BlockSpec((block_cap, block_cap), lambda i, j, k: (j, k)),
-        ],
-        out_specs=pl.BlockSpec((block_n, 1), lambda i, j, k: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.float32)],
         interpret=interpret,
     )(cands, xs, xs, binv, pmat)
     return out[:, 0]
@@ -289,6 +344,34 @@ def _kernel_tiled_clients(c_ref, xj_ref, xk_ref, b_ref, p_ref, o_ref, acc_ref, *
         o_ref[0] = _finalize(
             acc_ref[...], inv_l4=inv_l4, prior=prior
         ).astype(o_ref.dtype)
+
+
+def score_tiled_clients_spec(nb: int, n: int, cap: int, d: int, dtype, *,
+                             block_n: int, block_cap: int) -> KernelSpec:
+    """Launch geometry of the client-batched cap-tiled scoring kernel."""
+    return KernelSpec(
+        name="gp_score.tiled_clients",
+        grid=(nb, n // block_n, cap // block_cap, cap // block_cap),
+        in_shapes=(
+            ArraySpec((nb, n, d), dtype),
+            ArraySpec((nb, cap, d), dtype),
+            ArraySpec((nb, cap, d), dtype),
+            ArraySpec((nb, cap, cap), dtype),
+            ArraySpec((nb, cap, cap), dtype),
+        ),
+        in_specs=(
+            BlockDecl((1, block_n, d), lambda b, i, j, k: (b, i, 0)),
+            BlockDecl((1, block_cap, d), lambda b, i, j, k: (b, j, 0)),
+            BlockDecl((1, block_cap, d), lambda b, i, j, k: (b, k, 0)),
+            BlockDecl((1, block_cap, block_cap), lambda b, i, j, k: (b, j, k)),
+            BlockDecl((1, block_cap, block_cap), lambda b, i, j, k: (b, j, k)),
+        ),
+        out_shapes=(ArraySpec((nb, n, 1), dtype),),
+        out_specs=(BlockDecl((1, block_n, 1), lambda b, i, j, k: (b, i, 0)),),
+        scratch=(ScratchDecl((block_n, 1), jnp.float32),),
+        revisit_axes=(2, 3),
+        init_axes=(2, 3),
+    )
 
 
 @functools.partial(
@@ -315,25 +398,15 @@ def uncertainty_scores_tiled_clients_kernel(
     assert cap % block_cap == 0, (cap, block_cap)
     assert xs.shape == (nb, cap, d), (xs.shape, cands.shape)
     assert binv.shape == pmat.shape == (nb, cap, cap), (binv.shape, pmat.shape)
-    grid = (nb, n // block_n, cap // block_cap, cap // block_cap)
-    out = pl.pallas_call(
+    spec = score_tiled_clients_spec(nb, n, cap, d, cands.dtype,
+                                    block_n=block_n, block_cap=block_cap)
+    out = spec.pallas_call(
         functools.partial(
             _kernel_tiled_clients,
             inv_two_l2=0.5 / (lengthscale**2),
             inv_l4=1.0 / (lengthscale**4),
             prior=prior,
         ),
-        out_shape=jax.ShapeDtypeStruct((nb, n, 1), cands.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_n, d), lambda b, i, j, k: (b, i, 0)),
-            pl.BlockSpec((1, block_cap, d), lambda b, i, j, k: (b, j, 0)),
-            pl.BlockSpec((1, block_cap, d), lambda b, i, j, k: (b, k, 0)),
-            pl.BlockSpec((1, block_cap, block_cap), lambda b, i, j, k: (b, j, k)),
-            pl.BlockSpec((1, block_cap, block_cap), lambda b, i, j, k: (b, j, k)),
-        ],
-        out_specs=pl.BlockSpec((1, block_n, 1), lambda b, i, j, k: (b, i, 0)),
-        scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.float32)],
         interpret=interpret,
     )(cands, xs, xs, binv, pmat)
     return out[:, :, 0]

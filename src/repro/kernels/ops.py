@@ -92,13 +92,19 @@ def _pad_gram(a: jax.Array, target: int) -> jax.Array:
 
 
 def _resolve_blocks(kind, n, cap, d, n_clients, block_n, block_cap, dtype=None):
-    """Fill in unset block sizes from the deterministic autotuner."""
+    """Fill in unset block sizes from the deterministic autotuner; validate
+    user-pinned ones against the VMEM budget (tuner picks are feasible by
+    construction, explicit pins are not)."""
+    pinned = block_n is not None or block_cap is not None
     if block_n is None or block_cap is None:
         bn, bc = autotune.select_blocks(
             kind, n=n, cap=cap, d=d, n_clients=n_clients, dtype=dtype
         )
         block_n = bn if block_n is None else block_n
         block_cap = bc if block_cap is None else block_cap
+    if pinned:
+        autotune.validate_blocks(kind, block_n=block_n, block_cap=block_cap,
+                                 cap=cap, d=d, dtype=dtype)
     return block_n, block_cap
 
 

@@ -20,7 +20,8 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec
 
 
 def _kernel(x_ref, v_ref, b_ref, o_ref, *, scale: float):
@@ -52,16 +53,29 @@ def rff_features_kernel(
     assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
     b2 = b.reshape(1, m)
     scale = math.sqrt(2.0 / n_features)
-    grid = (n // block_n, m // block_m)
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=scale),
-        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
-        interpret=interpret,
+    spec = features_spec(n, m, d, x.dtype, block_n=block_n, block_m=block_m)
+    return spec.pallas_call(
+        functools.partial(_kernel, scale=scale), interpret=interpret
     )(x, v, b2)
+
+
+def features_spec(n: int, m: int, d: int, dtype, *, block_n: int,
+                  block_m: int) -> KernelSpec:
+    """Launch geometry of the RFF featurization kernel: every grid cell
+    writes its own (block_n, block_m) output tile exactly once."""
+    return KernelSpec(
+        name="rff_features",
+        grid=(n // block_n, m // block_m),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((m, d), dtype),
+            ArraySpec((1, m), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i, j: (i, 0)),
+            BlockDecl((block_m, d), lambda i, j: (j, 0)),
+            BlockDecl((1, block_m), lambda i, j: (0, j)),
+        ),
+        out_shapes=(ArraySpec((n, m), dtype),),
+        out_specs=(BlockDecl((block_n, block_m), lambda i, j: (i, j)),),
+    )

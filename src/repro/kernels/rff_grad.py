@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec
+
 
 def _kernel(x_ref, v_ref, b_ref, w_ref, o_ref, *, scale: float):
     j = pl.program_id(1)
@@ -67,17 +69,37 @@ def rff_grad_kernel(
     b2 = b.reshape(1, m)
     w2 = w.reshape(1, m)
     scale = math.sqrt(2.0 / n_features)
-    grid = (n // block_n, m // block_m)
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=scale),
-        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
-            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-        interpret=interpret,
+    spec = grad_spec(n, m, d, x.dtype, block_n=block_n, block_m=block_m)
+    return spec.pallas_call(
+        functools.partial(_kernel, scale=scale), interpret=interpret
     )(x, v, b2, w2)
+
+
+def grad_spec(n: int, m: int, d: int, dtype, *, block_n: int,
+              block_m: int) -> KernelSpec:
+    """Launch geometry of the RFF gradient-contraction kernel.  The M grid
+    axis is the reduction: each (block_n, d) output block is revisited
+    across it and the kernel accumulates IN the output ref (init write at
+    j == 0), so the output itself is the accumulator
+    (``out_accumulates``)."""
+    return KernelSpec(
+        name="rff_grad",
+        grid=(n // block_n, m // block_m),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((m, d), dtype),
+            ArraySpec((1, m), dtype),
+            ArraySpec((1, m), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i, j: (i, 0)),
+            BlockDecl((block_m, d), lambda i, j: (j, 0)),
+            BlockDecl((1, block_m), lambda i, j: (0, j)),
+            BlockDecl((1, block_m), lambda i, j: (0, j)),
+        ),
+        out_shapes=(ArraySpec((n, d), dtype),),
+        out_specs=(BlockDecl((block_n, d), lambda i, j: (i, 0)),),
+        revisit_axes=(1,),
+        init_axes=(1,),
+        out_accumulates=True,
+    )

@@ -13,7 +13,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec
 
 
 def _kernel(x1_ref, x2_ref, o_ref, *, inv_two_l2: float):
@@ -41,15 +42,27 @@ def sqexp_kernel(
     n, d = x1.shape
     m = x2.shape[0]
     assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
-    grid = (n // block_n, m // block_m)
-    return pl.pallas_call(
+    spec = sqexp_spec(n, m, d, x1.dtype, block_n=block_n, block_m=block_m)
+    return spec.pallas_call(
         functools.partial(_kernel, inv_two_l2=0.5 / (lengthscale**2)),
-        out_shape=jax.ShapeDtypeStruct((n, m), x1.dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
         interpret=interpret,
     )(x1, x2)
+
+
+def sqexp_spec(n: int, m: int, d: int, dtype, *, block_n: int,
+               block_m: int) -> KernelSpec:
+    """Launch geometry of the SE Gram kernel: one writer per output tile."""
+    return KernelSpec(
+        name="sqexp",
+        grid=(n // block_n, m // block_m),
+        in_shapes=(
+            ArraySpec((n, d), dtype),
+            ArraySpec((m, d), dtype),
+        ),
+        in_specs=(
+            BlockDecl((block_n, d), lambda i, j: (i, 0)),
+            BlockDecl((block_m, d), lambda i, j: (j, 0)),
+        ),
+        out_shapes=(ArraySpec((n, m), dtype),),
+        out_specs=(BlockDecl((block_n, block_m), lambda i, j: (i, j)),),
+    )

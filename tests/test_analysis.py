@@ -4,13 +4,16 @@ Two halves:
 
   * **negative suite** -- one deliberately-violating program per rule
     (inline eigh in a scan body, bf16 carry promoted, un-donated buffer,
-    extra psum vs the declared census, host callback in a scanned body),
-    each caught WITH a jaxpr source location pointing at this file;
+    extra psum vs the declared census, host callback in a scanned body;
+    plus one violating ``KernelSpec`` per kernel-audit rule and one seeded
+    PRNG misuse per key-flow rule), each caught WITH a source location --
+    this file for jaxpr rules, kernel name + grid cell for launch rules;
   * **positive gate** -- every shipping contract in the registry lints
     clean, and the ``python -m repro.analysis`` CLI round-trips.
 """
 
 import io
+import json
 import os
 import subprocess
 import sys
@@ -27,7 +30,8 @@ from repro.analysis import (
     no_recompiles,
     steady_state_guard,
 )
-from repro.analysis import hlo_audit, jaxpr_lint
+from repro.analysis import hlo_audit, jaxpr_lint, kernel_audit, key_flow
+from repro.kernels.spec import ArraySpec, BlockDecl, KernelSpec, ScratchDecl
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +165,236 @@ def test_fingerprints_are_shared_and_nonempty():
 
 
 # ---------------------------------------------------------------------------
+# Kernel-launch audit: one violating KernelSpec per rule
+# ---------------------------------------------------------------------------
+
+
+def _spec(**over):
+    """A clean 2x2-grid fixture spec; each test perturbs ONE declaration."""
+    base = dict(
+        name="test.fixture",
+        grid=(2, 2),
+        in_shapes=(ArraySpec((32, 16), jnp.float32),),
+        in_specs=(BlockDecl((16, 16), lambda i, j: (i, 0)),),
+        out_shapes=(ArraySpec((32, 32), jnp.float32),),
+        out_specs=(BlockDecl((16, 16), lambda i, j: (i, j)),),
+    )
+    base.update(over)
+    return KernelSpec(**base)
+
+
+def test_clean_spec_fixture_audits_clean():
+    assert kernel_audit.audit_spec(_spec()) == []
+
+
+def test_seeded_write_race_caught_with_cell():
+    """Two grid cells differing OUTSIDE the revisit axes write one block."""
+    spec = _spec(out_shapes=(ArraySpec((32, 16), jnp.float32),),
+                 out_specs=(BlockDecl((16, 16), lambda i, j: (i, 0)),))
+    vs = kernel_audit.check_geometry(spec)
+    assert {v.rule for v in vs} == {"kernel-write-race"}
+    assert "test.fixture" in vs[0].message  # kernel name...
+    assert "(0, 0)" in vs[0].message and "(0, 1)" in vs[0].message  # ...cells
+    assert vs[0].source == "test.fixture"
+    # the SAME mapping is legal once the second axis is a declared reduction
+    ok = _spec(out_shapes=(ArraySpec((32, 16), jnp.float32),),
+               out_specs=(BlockDecl((16, 16), lambda i, j: (i, 0)),),
+               scratch=(ScratchDecl((16, 16), jnp.float32),),
+               revisit_axes=(1,), init_axes=(1,))
+    assert kernel_audit.check_geometry(ok) == []
+
+
+def test_unwritten_output_block_caught():
+    spec = _spec(grid=(2,),
+                 in_specs=(BlockDecl((16, 16), lambda i: (i, 0)),),
+                 out_specs=(BlockDecl((16, 16), lambda i: (i, 0)),))
+    vs = kernel_audit.check_geometry(spec)
+    assert {v.rule for v in vs} == {"kernel-unwritten-block"}
+    assert "(0, 1)" in vs[0].message  # the stranded block
+
+
+def test_oob_index_map_caught_with_cell():
+    spec = _spec(grid=(2,),
+                 in_specs=(BlockDecl((16, 16), lambda i: (i + 1, 0)),),
+                 out_shapes=(ArraySpec((32, 16), jnp.float32),),
+                 out_specs=(BlockDecl((16, 16), lambda i: (i, 0)),))
+    vs = kernel_audit.check_geometry(spec)
+    assert [v.rule for v in vs] == ["kernel-oob-index"]
+    assert "grid cell (1)" in vs[0].message  # offending grid cell
+    assert "beyond padded bound 32" in vs[0].message
+
+
+def test_leading_revisit_axis_caught():
+    spec = _spec(out_shapes=(ArraySpec((16, 32), jnp.float32),),
+                 out_specs=(BlockDecl((16, 16), lambda i, j: (0, j)),),
+                 scratch=(ScratchDecl((16, 16), jnp.float32),),
+                 revisit_axes=(0,), init_axes=(0,))
+    vs = kernel_audit.check_geometry(spec)
+    assert "kernel-revisit-order" in {v.rule for v in vs}
+
+
+def test_misaligned_block_caught():
+    spec = _spec(in_shapes=(ArraySpec((30, 16), jnp.float32),))
+    vs = kernel_audit.check_geometry(spec)
+    assert any(v.rule == "kernel-block-misaligned"
+               and "axes [0]" in v.message for v in vs)
+
+
+def test_missing_accumulator_caught():
+    spec = _spec(out_shapes=(ArraySpec((32, 16), jnp.float32),),
+                 out_specs=(BlockDecl((16, 16), lambda i, j: (i, 0)),),
+                 revisit_axes=(1,), init_axes=(1,))
+    vs = kernel_audit.check_geometry(spec)
+    assert "kernel-accum-missing" in {v.rule for v in vs}
+
+
+def test_accumulator_init_mismatch_caught():
+    spec = _spec(out_shapes=(ArraySpec((32, 16), jnp.float32),),
+                 out_specs=(BlockDecl((16, 16), lambda i, j: (i, 0)),),
+                 scratch=(ScratchDecl((16, 16), jnp.float32),),
+                 revisit_axes=(1,), init_axes=())
+    vs = kernel_audit.check_geometry(spec)
+    assert any(v.rule == "kernel-accum-init"
+               and "(0, 1)" in v.message for v in vs)  # first revisiting cell
+
+
+def test_bf16_accumulator_caught_on_real_rff_grad_spec():
+    """rff_grad accumulates IN its output ref, so a bf16 launch would sum
+    partials in bf16 -- the audit must reject the REAL spec at bf16 (the
+    shipping contract pins it to f32)."""
+    from repro.kernels.rff_grad import grad_spec
+
+    vs = kernel_audit.check_geometry(
+        grad_spec(128, 256, 32, jnp.bfloat16, block_n=64, block_m=128))
+    assert [v.rule for v in vs] == ["kernel-accum-dtype"]
+    assert "rff_grad" in vs[0].message and "bfloat16" in vs[0].message
+
+
+def test_over_budget_block_pick_caught():
+    """A block pair the tuner would never emit -- but a user CAN pin --
+    blows the per-cell VMEM budget and is caught statically."""
+    from repro.kernels.gp_score import score_tiled_spec
+
+    spec = score_tiled_spec(256, 2048, 256, jnp.float32,
+                            block_n=256, block_cap=1024)
+    vs = kernel_audit.check_vmem(spec, backend="tpu")
+    assert [v.rule for v in vs] == ["kernel-vmem-budget"]
+    assert "gp_score.tiled" in vs[0].message
+    assert "budget" in vs[0].message and "(0, 0, 0)" in vs[0].message
+    # the tuner's own pick for the same shape fits
+    from repro.kernels import autotune
+
+    bn, bc = autotune.select_blocks("score", n=256, cap=2048, d=256,
+                                    backend="tpu")
+    ok = score_tiled_spec(256, 2048, 256, jnp.float32, block_n=bn,
+                          block_cap=min(bc, 2048))
+    assert kernel_audit.check_vmem(ok, backend="tpu") == []
+
+
+# ---------------------------------------------------------------------------
+# PRNG key-flow lint: one seeded misuse per rule
+# ---------------------------------------------------------------------------
+
+
+def test_reused_key_caught_with_location():
+    def f(key):
+        a = jax.random.uniform(key, (3,))
+        b = jax.random.normal(key, (3,))  # seeded reuse of `key`
+        return a + b
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jax.random.PRNGKey(0)))
+    assert [v.rule for v in vs] == ["key-reuse"]
+    assert "test_analysis" in vs[0].source
+
+
+def test_sample_then_derive_caught():
+    """split/fold of an already-sampled key walks the same counter stream."""
+    def f(key):
+        a = jax.random.uniform(key, (3,))
+        kb = jax.random.fold_in(key, 7)  # seeded derive-after-sample
+        return a + jax.random.normal(kb, (3,))
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jax.random.PRNGKey(0)))
+    assert [v.rule for v in vs] == ["key-reuse"]
+    # distinct-parameter derivations of an UNSAMPLED key stay clean
+    def ok(key):
+        a = jax.random.uniform(jax.random.fold_in(key, 1), (3,))
+        return a + jax.random.normal(jax.random.fold_in(key, 2), (3,))
+
+    assert key_flow.check_key_flow(
+        jax.make_jaxpr(ok)(jax.random.PRNGKey(0))) == []
+
+
+def test_same_fold_constant_twice_caught():
+    def f(key):
+        a = jax.random.uniform(jax.random.fold_in(key, 3), (3,))
+        b = jax.random.normal(jax.random.fold_in(key, 3), (3,))  # collision
+        return a + b
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jax.random.PRNGKey(0)))
+    assert [v.rule for v in vs] == ["key-reuse"]
+
+
+def test_scan_carry_unsplit_caught():
+    def f(key):
+        def body(c, _):
+            return c, jax.random.uniform(c, ())  # carry never split
+
+        _, ys = jax.lax.scan(body, key, None, length=4)
+        return ys
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jax.random.PRNGKey(0)))
+    assert [v.rule for v in vs] == ["key-carry-unsplit"]
+    assert "test_analysis" in vs[0].source
+    # the split-every-iteration version is clean
+    def ok(key):
+        def body(c, _):
+            c, sub = jax.random.split(c)
+            return c, jax.random.uniform(sub, ())
+
+        return jax.lax.scan(body, key, None, length=4)[1]
+
+    assert key_flow.check_key_flow(
+        jax.make_jaxpr(ok)(jax.random.PRNGKey(0))) == []
+
+
+def test_constant_key_caught_at_creation_site():
+    def f(x):
+        kk = jax.random.PRNGKey(777)
+        return x + jax.random.normal(kk, (3,))
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jnp.ones(3)))
+    assert [v.rule for v in vs] == ["key-constant"]
+    assert "test_analysis" in vs[0].source
+
+
+def test_suppression_comment_honored():
+    def f(x):
+        kk = jax.random.PRNGKey(777)  # key-flow: ok (negative-test fixture)
+        return x + jax.random.normal(kk, (3,))
+
+    report = key_flow.analyze_key_flow(jax.make_jaxpr(f)(jnp.ones(3)))
+    assert report.violations == []
+    assert [v.rule for v in report.suppressed] == ["key-constant"]
+
+
+def test_split_family_element_reuse_caught():
+    def f(key):
+        ks = jax.random.split(key, 3)
+        return jax.random.uniform(ks[0], ()) + jax.random.normal(ks[0], ())
+
+    vs = key_flow.check_key_flow(jax.make_jaxpr(f)(jax.random.PRNGKey(0)))
+    assert [v.rule for v in vs] == ["key-reuse"]
+    # distinct elements of the family are distinct keys
+    def ok(key):
+        ks = jax.random.split(key, 3)
+        return jax.random.uniform(ks[0], ()) + jax.random.normal(ks[1], ())
+
+    assert key_flow.check_key_flow(
+        jax.make_jaxpr(ok)(jax.random.PRNGKey(0))) == []
+
+
+# ---------------------------------------------------------------------------
 # Steady-state guard
 # ---------------------------------------------------------------------------
 
@@ -257,6 +491,36 @@ def test_runner_wraps_lowering_errors(capsys):
         del CONTRACTS[name]
     assert rc == 1
     assert "lowering-error" in capsys.readouterr().out
+
+
+def test_contract_registry_floor():
+    """The registry must carry the full contract population: the engine
+    contracts plus the kernel-audit and key-flow families (the verify.sh
+    --static floor guards the same count in CI)."""
+    from repro.analysis.contracts import CONTRACTS
+
+    assert len(CONTRACTS) >= 27, sorted(CONTRACTS)
+    assert sum(n.startswith("kernel/") for n in CONTRACTS) >= 11
+    assert sum(n.startswith("key-flow/") for n in CONTRACTS) >= 5
+
+
+def test_cli_json_report(tmp_path):
+    """--json writes the machine-readable report CI uploads as an artifact."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(repo, "src"))
+    path = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--only", "optimizer-dtype",
+         "--json", str(path)],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(path.read_text())
+    assert report["clean"] is True
+    assert report["n_contracts"] == 1 and report["n_violations"] == 0
+    entry = report["contracts"]["optimizer-dtype"]
+    assert entry["violations"] == [] and "bf16" in entry["description"]
 
 
 def test_cli_smoke():

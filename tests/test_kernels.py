@@ -498,6 +498,90 @@ def test_autotune_explicit_blocks_override():
     assert want.shape == got.shape
 
 
+def test_validate_blocks_rejects_over_budget_pins():
+    """An AlgoConfig block pin the VMEM budget cannot hold must fail loudly
+    (naming the blocks and the budget), not as an opaque Mosaic error."""
+    from repro.kernels import autotune
+
+    with pytest.raises(ValueError) as e:
+        autotune.validate_blocks("score", block_n=256, block_cap=1024,
+                                 cap=2048, d=256, backend="tpu")
+    msg = str(e.value)
+    assert "block_n=256" in msg and "block_cap=1024" in msg
+    assert "budget" in msg and "bytes" in msg
+    # an in-budget pin passes through untouched
+    assert autotune.validate_blocks(
+        "score", block_n=32, block_cap=128, cap=2048, d=256, backend="tpu"
+    ) == (32, 128)
+    # block_cap >= cap routes resident: the pin is judged at the REAL
+    # working set (lane-padded cap), so a nominal huge block_cap is fine
+    # when the trajectory itself fits
+    assert autotune.validate_blocks(
+        "score", block_n=32, block_cap=1 << 20, cap=256, d=16, backend="tpu"
+    ) == (32, 1 << 20)
+
+
+def test_ops_reject_over_budget_pins_before_launch():
+    n, d, cap = 8, 256, 2048
+    cands, xs, binv, pmat, _ = _gp_data(n, d, cap, seed=3)
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.uncertainty_scores(
+            cands, xs, binv, pmat, lengthscale=0.8, prior=d / 0.64,
+            block_n=256, block_cap=1024, force_pallas=True,
+        )
+    # grad's working set is lighter (no (bc, bc) Gram tiles): it takes
+    # d=2048 for the same pin to genuinely blow the budget
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.grad_mean_batch(
+            jnp.zeros((8, 2048)), jnp.zeros((2048, 2048)), jnp.zeros((2048,)),
+            lengthscale=0.8, block_n=256, block_cap=1024, force_pallas=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# bf16 inputs + f32 scratch: tiled-kernel interpret-mode parity
+# ---------------------------------------------------------------------------
+
+
+def _to_bf16(*arrays):
+    return tuple(a.astype(jnp.bfloat16) for a in arrays)
+
+
+def test_tiled_scores_bf16_inputs_f32_scratch_parity():
+    """bf16 inputs through the cap-tiled scoring kernel: the f32 scratch
+    accumulator keeps the error at input-quantization level (~bf16 eps),
+    NOT at sum-length level -- compared against the f32 oracle."""
+    from repro.kernels.gp_score import score_tiled_spec
+
+    n, d, cap = 32, 8, 256
+    spec = score_tiled_spec(n, cap, d, jnp.bfloat16, block_n=32, block_cap=128)
+    assert all(jnp.dtype(s.dtype) == jnp.float32 for s in spec.scratch)
+    cands, xs, binv, pmat, _ = _gp_data(n, d, cap)
+    got = ops.uncertainty_scores(
+        *_to_bf16(cands, xs, binv, pmat), lengthscale=0.8, prior=d / 0.64,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    assert got.dtype == jnp.bfloat16
+    want = ref.uncertainty_scores(cands, xs, binv, pmat, 0.8, d / 0.64)
+    _norm_close(got.astype(jnp.float32), want, 4e-2)
+
+
+def test_tiled_grad_mean_bf16_inputs_f32_scratch_parity():
+    from repro.kernels.gp_grad import grad_tiled_spec
+
+    n, d, cap = 32, 8, 256
+    spec = grad_tiled_spec(n, cap, d, jnp.bfloat16, block_n=32, block_cap=128)
+    assert all(jnp.dtype(s.dtype) == jnp.float32 for s in spec.scratch)
+    cands, xs, _, _, alpha = _gp_data(n, d, cap)
+    got = ops.grad_mean_batch(
+        *_to_bf16(cands, xs, alpha), lengthscale=0.8,
+        block_n=32, block_cap=128, force_pallas=True,
+    )
+    assert got.dtype == jnp.bfloat16
+    want = ref.grad_mean_batch(cands, xs, alpha, 0.8)
+    _norm_close(got.astype(jnp.float32), want, 4e-2)
+
+
 def test_algo_config_block_overrides_thread_through():
     """score_block_*/grad_block_* reach the kernels via gp_surrogate without
     changing results (tiling is value-preserving)."""
